@@ -1,0 +1,24 @@
+"""Shared benchmark helpers: CSV emission + cluster construction."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def timed(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    import jax
+
+    jax.block_until_ready(out) if out is not None else None
+    return (time.perf_counter() - t0) / repeat * 1e6, out

@@ -1,0 +1,49 @@
+"""Render experiments/roofline/*.json into the §Roofline markdown table.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table
+"""
+import glob
+import json
+import os
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(dirpath="experiments/roofline", out="experiments/roofline/TABLE.md"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "skipped":
+            rows.append((r["cell"], None, r["why"]))
+        elif r.get("status") == "ok":
+            rows.append((r["cell"], r, ""))
+    rows.sort(key=lambda x: (x[0].split(".")[0],
+                             ORDER.index(x[0].split(".")[1])
+                             if x[0].split(".")[1] in ORDER else 9))
+    lines = [
+        "# Roofline baseline table (single-pod 16x16, per device per step)",
+        "",
+        "| cell | compute s | memory s | collective s | dominant | MFU* | "
+        "useful | bw_eff | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for cell, r, why in rows:
+        if r is None:
+            lines.append(f"| {cell} | — | — | — | skipped | — | — | — | {why} |")
+            continue
+        t = r["terms_s"]
+        lines.append(
+            f"| {cell} | {t['compute']:.4f} | {t['memory']:.4f} | "
+            f"{t['collective']:.4f} | **{r['dominant']}** | "
+            f"{r['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.2f} | "
+            f"{r.get('bw_efficiency') or '—'} | {r.get('attention_mode','')} |")
+    lines += ["", "MFU* = model-flops-at-peak / dominant term; bw_eff = ideal"
+              " decode bytes / achieved (decode cells).", ""]
+    os.makedirs(dirpath, exist_ok=True)
+    with open(out, "w") as f:
+        f.write("\n".join(lines))
+    print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness entry point (deliverable d): one module per paper
+table/figure.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [table ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (cluster_scaling, expert_batching, limited_memory,
+                        offline_bct, pd_disagg, primitives, slo_scaling)
+from benchmarks.common import ROWS
+
+TABLES = {
+    "t2_primitives": primitives.run,
+    "t3_offline_bct": offline_bct.run,
+    "t4_slo_scaling": slo_scaling.run,
+    "t5_cluster_scaling": cluster_scaling.run,
+    "t6_pd_disagg": pd_disagg.run,
+    "t7_limited_memory": limited_memory.run,
+    "f2b_expert_batching": expert_batching.run,
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(TABLES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in wanted:
+        print(f"# --- {name} ---")
+        TABLES[name]()
+    print(f"# {len(ROWS)} rows in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end driver (deliverable b): serve a small MoE model with batched
+requests through the full coroutine runtime — two nodes, long-tail output
+lengths, eviction under memory pressure, migration, straggler PARTITION —
+and compare against disabling the coroutine features.
+
+    PYTHONPATH=src python examples/batch_inference.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
+from repro.runtime.engine import NodeEngine
+
+
+def longtail_lengths(rng, n, mean=12, sigma=1.0, cap=80):
+    return np.minimum(np.maximum(
+        rng.lognormal(np.log(mean), sigma, n).astype(int), 2), cap)
+
+
+def run(enable_coroutines: bool):
+    cfg = reduced_config("phi3_5_moe")
+    rng = np.random.default_rng(1)
+    engines = [NodeEngine(cfg, node_id=i, max_active=4, max_len=128,
+                          page_size=16, seed=0) for i in range(2)]
+    sc = SchedulerConfig(page_size=16,
+                         refill_threshold=0.75 if enable_coroutines else 0.0,
+                         longtail_active=2 if enable_coroutines else 0,
+                         migrate_imbalance=2 if enable_coroutines else 10**9)
+    sched = CoroutineScheduler(engines, sc)
+    prompts = [list(rng.integers(2, cfg.vocab_size, int(n)))
+               for n in rng.integers(4, 12, 24)]
+    outs = longtail_lengths(rng, 24)
+    sched.submit(prompts, [int(o) for o in outs])
+    t0 = time.monotonic()
+    rep = sched.run(max_ticks=2000)
+    wall = time.monotonic() - t0
+    return rep, wall, engines
+
+
+def main():
+    rep, wall, engines = run(enable_coroutines=True)
+    print(f"[coroutine ON ] BCT={wall:6.2f}s completed={rep['completed']}/"
+          f"{rep['total']} decode_steps={sum(e.decode_steps for e in engines)}")
+    for i, e in enumerate(engines):
+        print(f"  node{i}: primitives={e.stats.counts} "
+              f"host_store={e.host_store.nbytes()/2**20:.1f}MiB")
+    print(f"  events: {rep['log_tail']}")
+    rep2, wall2, engines2 = run(enable_coroutines=False)
+    print(f"[coroutine OFF] BCT={wall2:6.2f}s completed={rep2['completed']}/"
+          f"{rep2['total']} decode_steps={sum(e.decode_steps for e in engines2)}")
+    print(f"-> coroutine scheduling used "
+          f"{sum(e.decode_steps for e in engines)} vs "
+          f"{sum(e.decode_steps for e in engines2)} decode steps "
+          f"(refill keeps slots full; fewer wasted lockstep steps)")
+
+
+if __name__ == "__main__":
+    main()

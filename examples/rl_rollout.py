@@ -1,0 +1,47 @@
+"""RL-rollout acceleration (paper §6.3): fixed batch of 256 rollouts on a
+simulated 16-GPU cluster; ON_LONG_TAIL PARTITION reclaims idle devices when
+the batch drains.
+
+    PYTHONPATH=src python examples/rl_rollout.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import plan as plan_lib
+from repro.core.scheduler import SchedulerConfig
+from repro.runtime.cluster import Cluster, Workload
+
+
+def rollout_workload(n=256, seed=0):
+    rng = np.random.default_rng(seed)
+    # heavily long-tailed generation lengths (paper: final seqs reach >40K)
+    outs = np.minimum(np.maximum(
+        rng.lognormal(np.log(2048), 1.3, n).astype(int), 64), 49152)
+    return Workload([[1] * 512 for _ in range(n)], [int(o) for o in outs])
+
+
+def main():
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    wl = rollout_workload()
+    for partition in (False, True):
+        sc = SchedulerConfig(page_size=64,
+                             longtail_active=8 if partition else 0,
+                             longtail_min_remaining=4096)
+        cl = Cluster(cfg, hw, nodes=2, devices_per_node=8, max_active=256,
+                     max_len=51200, sched_cfg=sc)
+        rep = cl.run(wl)
+        parts = sum(e.stats.counts["partition"] for e in cl.engines)
+        print(f"partition={'ON ' if partition else 'OFF'} "
+              f"rollout_time={rep['bct_s']:8.1f}s util={rep['utilization']:.3f} "
+              f"partitions={parts}")
+        if partition:
+            t_on = rep["bct_s"]
+        else:
+            t_off = rep["bct_s"]
+    print(f"-> PARTITION cut rollout time {100*(1-t_on/t_off):.1f}% "
+          f"(paper: 5-10% per iteration)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""The paper's primary contribution: the event-driven sequence coroutine
+compute model.
+
+- coroutine.py    SequenceCoroutine state machine (Fig. 4a)
+- primitives.py   YIELD / COMBINE / PARTITION / MIGRATE (§4.2)
+- forward.py      Algorithm 1 — module-granularity forward with
+                  intra-forward yields and MoE batch COMBINE
+- scheduler.py    Algorithm 2 — event-driven scheduling loop + §5.3
+                  dynamic sequence management
+- events.py       priority event queue
+- plan.py         §5.4 — module roofline model, execution DAG,
+                  critical-path configuration search
+"""
+from repro.core.coroutine import Phase, SequenceCoroutine, Status  # noqa
+from repro.core.primitives import combine, migrate, partition, yield_  # noqa
+from repro.core.scheduler import CoroutineScheduler, SchedulerConfig  # noqa

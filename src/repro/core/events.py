@@ -1,0 +1,59 @@
+"""Event queue for the event-driven coroutine runtime (paper §3/§5).
+
+Events are processed by the scheduler loop; GPUs always have work as long
+as any queue is non-empty.  The queue is priority-ordered so that
+correctness events (SYNC) precede utilization events (REFILL) which precede
+opportunistic ones (MIGRATE).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+from typing import Any, Optional
+
+
+class EventKind(enum.IntEnum):          # ordering = processing priority
+    SYNC = 0              # wait for async KV appends (page boundary, §5.3 i)
+    SEQ_DONE = 1          # eviction of completed sequences (§5.3 ii)
+    PAGE_BOUNDARY = 2     # extension / yield decisions (§5.3 iii)
+    MODULE_READY = 3      # intra-forward successor enqueued by YIELD
+    REFILL = 4            # ON_REFILL_NODE (§5.1 Alg. 2)
+    LONG_TAIL = 5         # ON_LONG_TAIL -> PARTITION
+    MIGRATE = 6           # opportunistic load balancing
+    NODE_FAILURE = 7      # health monitor (§5.6)
+
+
+@dataclasses.dataclass(order=True)
+class Event:
+    sort_key: tuple = dataclasses.field(init=False, repr=False)
+    kind: EventKind = EventKind.MODULE_READY
+    node: int = 0
+    payload: Any = None
+    seq: int = dataclasses.field(default_factory=itertools.count().__next__)
+
+    def __post_init__(self):
+        self.sort_key = (int(self.kind), self.seq)
+
+
+class EventQueue:
+    def __init__(self):
+        self._heap = []
+        self._count = itertools.count()
+
+    def push(self, kind: EventKind, node: int = 0, payload: Any = None):
+        ev = Event(kind=kind, node=node, payload=payload,
+                   seq=next(self._count))
+        heapq.heappush(self._heap, ev)
+
+    def pop(self) -> Optional[Event]:
+        if not self._heap:
+            return None
+        return heapq.heappop(self._heap)
+
+    def __len__(self):
+        return len(self._heap)
+
+    def __bool__(self):
+        return bool(self._heap)

@@ -1,0 +1,130 @@
+"""Algorithm 1: module-granularity forward pass with intra-forward yields.
+
+The paper's module wrapper (Fig. 4b) turns each neural module into a
+coroutine step: attention runs per sub-batch of size B_attn, YIELDs its
+hidden states, and the runtime COMBINEs all sub-batches into one
+B_moe-sized batch before the (sparse) MoE module.  Control returns to the
+host scheduler between every jitted module call — on TPU the yield point
+*is* the boundary between two compiled programs (DESIGN.md §3).
+
+This path executes real tokens in the mini-engine (module_granularity=True)
+and is what benchmarks/expert_batching.py measures (Fig. 2b reproduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, moe as moe_lib, transformer as T
+from repro.models.api import MeshAxes, ModelConfig
+
+
+@dataclasses.dataclass
+class ModuleTrace:
+    """Record of one coroutine step (for overhead accounting, Table 2)."""
+    module: str
+    layer: int
+    batch: int
+    tokens: int
+
+
+class ModuleRuntime:
+    """Per-model jitted module functions split at the paper's yield points.
+
+    Yield-point option (b) from Fig. 6: attention | MoE as separate
+    coroutine units (option (a) fuses them; option (c) per-expert is noted
+    as memory-prohibitive by the paper)."""
+
+    def __init__(self, cfg: ModelConfig, axes: MeshAxes, params):
+        assert cfg.family in ("moe", "dense"), cfg.family
+        self.cfg = cfg
+        self.axes = axes
+        self.params = params
+        # pre-split stacked layer params -> list of per-layer trees
+        L = cfg.num_layers
+        self.layer_params = [jax.tree.map(lambda x, i=i: x[i],
+                                          params["layers"])
+                             for i in range(L)]
+        self.traces: List[ModuleTrace] = []
+        self._embed = jax.jit(self._embed_impl)
+        self._attn = jax.jit(self._attn_impl, static_argnames=("nsub",))
+        self._ffn = jax.jit(self._ffn_impl)
+        self._head = jax.jit(self._head_impl)
+
+    # --- jitted module bodies ------------------------------------------
+    def _embed_impl(self, tokens):
+        return T._embed_tokens(self.cfg, self.params, tokens[:, None])
+
+    def _attn_impl(self, p, h, k_cache, v_cache, lengths, nsub):
+        """Attention for ONE sub-batch (B_attn rows of the slot arrays)."""
+        xn = layers.apply_norm(self.cfg, p["ln1"], h)
+        a, kc, vc = layers.attention_decode(self.cfg, p["attn"], xn,
+                                            k_cache, v_cache, lengths)
+        return h + a, kc, vc
+
+    def _ffn_impl(self, p, h):
+        xn = layers.apply_norm(self.cfg, p["ln2"], h)
+        if self.cfg.is_moe:
+            y, _ = moe_lib.moe_fwd(self.cfg, self.axes, p["moe"], xn)
+        else:
+            y = layers.mlp_fwd(self.cfg, p["mlp"], xn)
+        return h + y
+
+    def _head_impl(self, h):
+        h = layers.apply_norm(self.cfg, self.params["final_norm"], h)
+        logits = T.logits_fn(self.cfg, self.params, h)
+        return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+
+    # --- Algorithm 1 ------------------------------------------------------
+    def forward_decode(self, tokens, cache, lengths, b_attn: int,
+                       on_yield: Optional[Callable] = None):
+        """One decode step for the full active batch with B_attn
+        sub-batching and COMBINE before each FFN/MoE.
+
+        tokens (B,), cache pytree with leaves (L,B,S,...), lengths (B,).
+        Returns (next_tokens, new_cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        n_sub = max(B // max(b_attn, 1), 1)
+        bsz = B // n_sub
+        h = self._embed(tokens)
+        new_k, new_v = [], []
+        for l in range(cfg.num_layers):
+            p = self.layer_params[l]
+            kc_l, vc_l = cache["k"][l], cache["v"][l]
+            h_parts, k_parts, v_parts = [], [], []
+            for g in range(n_sub):
+                sl = slice(g * bsz, (g + 1) * bsz)
+                hg, kg, vg = self._attn(p, h[sl], kc_l[sl], vc_l[sl],
+                                        lengths[sl], n_sub)
+                self.traces.append(ModuleTrace("attention", l, bsz, bsz))
+                h_parts.append(hg)
+                k_parts.append(kg)
+                v_parts.append(vg)
+                if on_yield is not None:
+                    on_yield("attention", l, g)     # intra-forward YIELD
+            # COMBINE: concatenate yielded hidden states -> B_moe batch
+            h = jnp.concatenate(h_parts, axis=0)
+            new_k.append(jnp.concatenate(k_parts, axis=0))
+            new_v.append(jnp.concatenate(v_parts, axis=0))
+            h = self._ffn(p, h)
+            self.traces.append(ModuleTrace(
+                "moe" if cfg.is_moe else "mlp", l, B, B))
+            if on_yield is not None:
+                on_yield("ffn", l, 0)
+        cache = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
+        nxt = self._head(h)
+        return nxt, cache
+
+    def expert_load(self, b_moe: int) -> Dict[str, float]:
+        """Per-expert batch statistics at the MoE gate for a combined batch
+        of b_moe tokens (Fig. 2b quantity)."""
+        cfg = self.cfg
+        if not cfg.is_moe:
+            return {"per_expert": float(b_moe), "experts": 1}
+        per = b_moe * cfg.experts_per_token / cfg.num_experts
+        return {"per_expert": per, "experts": cfg.num_experts}

@@ -1,0 +1,114 @@
+"""The four coroutine primitives: YIELD / COMBINE / PARTITION / MIGRATE.
+
+These are engine-agnostic: any object exposing the small slot protocol
+(extract_slot / install_slot / free_slot, .host_store, .allocator) can host
+coroutines — the real mini-engine (runtime/engine.py) and the cluster
+simulator (runtime/cluster.py) both do.
+
+Semantics (paper §4.2):
+* yield_  — suspend at a module boundary: checkpoint state to the host
+            store, release the device slot, mark INACTIVE.  Control returns
+            to the scheduler.
+* combine — merge inactive coroutines into the active batch; resume is
+            implicit (there is no separate resume primitive).
+* partition — split one straggler's computation across a device group
+            (TP for a single sequence, DP for several); requires the
+            coroutine to have yielded first so its state is checkpointed.
+* migrate — move a coroutine's host-resident state to another node.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.coroutine import Phase, SequenceCoroutine, Status
+
+
+class PrimitiveStats:
+    def __init__(self):
+        self.counts = {"yield": 0, "combine": 0, "partition": 0, "migrate": 0}
+        self.seconds = {k: 0.0 for k in self.counts}
+        self.bytes_moved = {"yield": 0, "combine": 0, "migrate": 0}
+
+    def record(self, kind: str, dt: float, nbytes: int = 0):
+        self.counts[kind] += 1
+        self.seconds[kind] += dt
+        if kind in self.bytes_moved:
+            self.bytes_moved[kind] += nbytes
+
+
+def yield_(co: SequenceCoroutine, engine, *, keep_device: bool = False) -> None:
+    """Suspend `co`: checkpoint its device state to the host store and free
+    the slot.  With keep_device=True only the metadata transition happens
+    (intra-forward yield: hidden states stay on device per Alg. 1)."""
+    assert co.status == Status.ACTIVE, co.status
+    t0 = time.monotonic()
+    nbytes = 0
+    if not keep_device and co.slot is not None:
+        slices = engine.extract_slot(co)
+        nbytes = sum(int(np.asarray(v).nbytes) for v in slices.values())
+        engine.host_store.checkpoint(co.seq_id, slices, co.length)
+        engine.allocator.free_seq(co.seq_id)
+        engine.free_slot(co)
+        co.slot = None
+    co.status = Status.INACTIVE
+    co.yields += 1
+    co.fire("on_yield", None)
+    engine.stats.record("yield", time.monotonic() - t0, nbytes)
+
+
+def combine(cos: Sequence[SequenceCoroutine], engine) -> List[SequenceCoroutine]:
+    """Resume-by-combination: restore each coroutine's state into a free
+    device slot and mark ACTIVE.  Returns the coroutines that were actually
+    admitted (slot/page budget permitting)."""
+    admitted = []
+    t0 = time.monotonic()
+    nbytes = 0
+    for co in cos:
+        if co.status not in (Status.INACTIVE, Status.INIT):
+            continue
+        slot = engine.acquire_slot(co)
+        if slot is None:
+            break
+        co.slot = slot
+        if engine.host_store.has(co.seq_id):
+            slices = engine.host_store.restore(co.seq_id, engine.max_len)
+            nbytes += sum(v.nbytes for v in slices.values())
+            engine.install_slot(co, slices)
+        co.status = Status.ACTIVE
+        admitted.append(co)
+    engine.stats.record("combine", time.monotonic() - t0, nbytes)
+    return admitted
+
+
+def partition(co: SequenceCoroutine, engine, device_group: List[int]) -> None:
+    """Straggler acceleration: assign `co` to a tensor-parallel device
+    group.  The engine reconfigures its decode step for the group (on TPU:
+    re-lower with the group mesh; KV split across heads for GQA, latent
+    replicated for MLA, sequence-split otherwise — DESIGN.md §3)."""
+    assert co.status == Status.INACTIVE, "partition requires a prior yield"
+    t0 = time.monotonic()
+    co.partition_group = list(device_group)
+    engine.reconfigure_partition(co, device_group)
+    co.fire("on_partition", device_group)
+    engine.stats.record("partition", time.monotonic() - t0)
+
+
+def migrate(co: SequenceCoroutine, src_engine, dst_engine) -> None:
+    """Move host-resident state between nodes.  Asynchronous on a real
+    deployment (overlapped with compute); here the copy is immediate and
+    the overhead is accounted by the caller's clock model."""
+    assert co.status in (Status.INACTIVE, Status.INIT)
+    t0 = time.monotonic()
+    nbytes = 0
+    if src_engine.host_store.has(co.seq_id):
+        st = src_engine.host_store.seqs[co.seq_id]
+        nbytes = st.nbytes()
+        dst_engine.host_store.seqs[co.seq_id] = st
+        src_engine.host_store.drop(co.seq_id)
+    co.node = dst_engine.node_id
+    co.migrations += 1
+    co.fire("on_migrate", dst_engine.node_id)
+    src_engine.stats.record("migrate", time.monotonic() - t0, nbytes)

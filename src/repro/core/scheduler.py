@@ -1,0 +1,197 @@
+"""Event-driven coroutine scheduler: Algorithm 2 + §5.3 dynamic sequence
+management.
+
+The scheduler is generic over "engines" (one per node) implementing the
+slot protocol (see primitives.py).  Both the real mini-engine
+(runtime/engine.py — actually executes a JAX model on CPU) and the cluster
+simulator (runtime/cluster.py — virtual clocks from the §5.4 performance
+model) plug in here, so the scheduling logic benchmarked at 128 GPUs is the
+same code that decodes real tokens in the examples.
+
+Loop structure per decode *page* (P tokens, §5.3):
+  i.   Sync      — flush pending async KV appends (host = source of truth)
+  ii.  Eviction  — YIELD finished sequences, release pages
+  iii. Extension — extend page allocation or YIELD (most-progress-first)
+  iv.  Refill    — COMBINE waiting sequences into the active batch
+Callbacks:
+  ON_REFILL_NODE — trigger prefill when decode under-fills the node
+  ON_LONG_TAIL   — PARTITION stragglers over idle devices
+  MIGRATE        — rebalance suspended sequences across nodes (FIFO)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import primitives as prim
+from repro.core.coroutine import Phase, SequenceCoroutine, Status
+from repro.core.events import EventKind, EventQueue
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    page_size: int = 64              # P — decode tokens between checks
+    refill_threshold: float = 0.75   # refill when active < thr * slots
+    longtail_active: int = 2         # ON_LONG_TAIL when active <= this
+    longtail_min_remaining: int = 64
+    migrate_imbalance: int = 2       # min queue difference to migrate
+    max_partition_group: int = 8
+
+
+class CoroutineScheduler:
+    def __init__(self, engines: Sequence, config: SchedulerConfig = None):
+        self.engines = list(engines)
+        self.cfg = config or SchedulerConfig()
+        self.queue = EventQueue()
+        self.cos: Dict[int, SequenceCoroutine] = {}
+        self._next_id = 0
+        self.log: List[str] = []
+
+    # ------------------------------------------------------------------ API
+    def submit(self, prompts: Sequence[Sequence[int]],
+               max_out: Sequence[int]) -> List[int]:
+        """Distribute S_global evenly over nodes (Alg. 2 line 1)."""
+        ids = []
+        for i, (p, mo) in enumerate(zip(prompts, max_out)):
+            co = SequenceCoroutine(seq_id=self._next_id, prompt=list(p),
+                                   max_out=int(mo))
+            co.node = self.engines[i % len(self.engines)].node_id
+            self.cos[co.seq_id] = co
+            ids.append(co.seq_id)
+            self._next_id += 1
+        return ids
+
+    def pending(self, node: int, status: Status) -> List[SequenceCoroutine]:
+        return [c for c in self.cos.values()
+                if c.node == node and c.status == status and not c.done]
+
+    def all_done(self) -> bool:
+        return all(c.done for c in self.cos.values())
+
+    # ------------------------------------------------------------- main loop
+    def run(self, max_ticks: int = 100000) -> Dict:
+        """Run until batch completion; returns BCT stats."""
+        t0 = min(e.clock() for e in self.engines)
+        ticks = 0
+        while not self.all_done() and ticks < max_ticks:
+            for eng in self.engines:
+                self._node_tick(eng.node_id, eng)
+            self._global_balance()
+            ticks += 1
+        t1 = max(e.clock() for e in self.engines)
+        return self._report(t1 - t0, ticks)
+
+    # ------------------------------------------------------------ node logic
+    def _node_tick(self, node: int, eng):
+        active = [c for c in self.cos.values()
+                  if c.node == node and c.status == Status.ACTIVE]
+        # ON_REFILL_NODE: prefill when under-filled (Alg. 2 lines 7-11)
+        if len(active) < self.cfg.refill_threshold * eng.max_active:
+            self._refill(node, eng)
+            active = [c for c in self.cos.values()
+                      if c.node == node and c.status == Status.ACTIVE]
+        if not active:
+            eng.idle_tick()
+            return
+        # decode one page of tokens (P steps), then page-boundary phases
+        eng.decode_page(active, self.cfg.page_size)
+        self._page_boundary(node, eng, active)
+
+    def _page_boundary(self, node: int, eng, active):
+        # (i) Sync — async KV appends -> host store
+        eng.sync_appends(active)
+        # (ii) Eviction — finished sequences release device + host pages
+        for co in list(active):
+            if co.remaining == 0:
+                eng.allocator.free_seq(co.seq_id)
+                eng.free_slot(co)
+                co.slot = None
+                eng.host_store.drop(co.seq_id)
+                co.finish()
+        active = [c for c in active if not c.done]
+        # (iii) Extension — two-page reservation; evict most-progress-first
+        lengths = {c.seq_id: c.length for c in active}
+        for victim_id in eng.allocator.ensure_two_pages(lengths):
+            co = self.cos[victim_id]
+            if co.status == Status.ACTIVE:
+                prim.yield_(co, eng)
+                self.log.append(f"yield(evict) seq={victim_id}")
+        for co in active:
+            if not co.done and co.status == Status.ACTIVE:
+                eng.allocator.alloc(co.seq_id, 1)
+        # (iv) Refill — COMBINE suspended/prefilled sequences
+        self._refill(node, eng)
+        # ON_LONG_TAIL (Alg. 2 lines 12-14)
+        self._check_longtail(node, eng)
+
+    def _refill(self, node: int, eng):
+        waiting = self.pending(node, Status.INACTIVE)
+        if waiting:
+            waiting.sort(key=lambda c: c.submitted_t)     # FIFO fairness
+            prim.combine(waiting, eng)
+        # prefill new sequences if slots remain
+        inits = self.pending(node, Status.INIT)
+        if inits:
+            free_slots = eng.max_active - len(
+                [c for c in self.cos.values()
+                 if c.node == node and c.status == Status.ACTIVE])
+            if free_slots > 0:
+                batch = inits[: max(free_slots, 0)]
+                if batch:
+                    eng.prefill(batch)          # leaves them INACTIVE on host
+                    prim.combine(batch, eng)
+
+    def _check_longtail(self, node: int, eng):
+        live = [c for c in self.cos.values() if not c.done]
+        active = [c for c in live if c.status == Status.ACTIVE]
+        others = [c for c in live if c.status != Status.ACTIVE]
+        if (len(active) <= self.cfg.longtail_active and not others
+                and active
+                and max(c.remaining for c in active)
+                >= self.cfg.longtail_min_remaining
+                and not any(c.partition_group for c in active)):
+            # wait for yield (checkpoint), then PARTITION over idle devices
+            group = list(range(min(eng.num_devices,
+                                   self.cfg.max_partition_group)))
+            for co in sorted(active, key=lambda c: -c.remaining):
+                prim.yield_(co, eng)
+                prim.partition(co, eng, group)
+                self.log.append(
+                    f"partition seq={co.seq_id} group={len(group)}")
+                prim.combine([co], eng)
+                break
+
+    # ----------------------------------------------------------- migration
+    def _global_balance(self):
+        if len(self.engines) < 2:
+            return
+        nids = [e.node_id for e in self.engines]
+        loads = {n: len(self.pending(n, Status.INACTIVE))
+                 + len(self.pending(n, Status.INIT)) for n in nids}
+        hi = max(nids, key=loads.__getitem__)
+        lo = min(nids, key=loads.__getitem__)
+        if loads[hi] - loads[lo] >= self.cfg.migrate_imbalance:
+            movable = (self.pending(hi, Status.INACTIVE)
+                       or self.pending(hi, Status.INIT))
+            if movable:
+                co = movable[0]
+                by_id = {e.node_id: e for e in self.engines}
+                prim.migrate(co, by_id[hi], by_id[lo])
+                self.log.append(f"migrate seq={co.seq_id} {hi}->{lo}")
+
+    # ------------------------------------------------------------- reporting
+    def _report(self, bct: float, ticks: int) -> Dict:
+        scts = [c.sct() for c in self.cos.values() if c.sct() is not None]
+        stats = {}
+        for i, e in enumerate(self.engines):
+            stats[f"node{i}"] = {"counts": dict(e.stats.counts),
+                                 "bytes": dict(e.stats.bytes_moved)}
+        return {
+            "bct_s": bct,
+            "ticks": ticks,
+            "completed": sum(c.done for c in self.cos.values()),
+            "total": len(self.cos),
+            "mean_sct_s": sum(scts) / len(scts) if scts else 0.0,
+            "primitives": stats,
+            "log_tail": self.log[-20:],
+        }

@@ -1,0 +1,74 @@
+"""Data pipeline substrate: deterministic sharded synthetic LM data with
+long-tail request generators for inference workloads.
+
+Every host builds only its shard (seeded by (epoch, host_id)) — the pattern
+a 1000-node deployment needs: no global shuffle state, resumable from a
+(step, epoch) cursor stored in the train checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.models.api import ModelConfig
+
+
+@dataclasses.dataclass
+class DataConfig:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+    num_hosts: int = 1
+    host_id: int = 0
+    seed: int = 0
+    markov_p: float = 0.8       # synthetic structure (learnable signal)
+
+
+class SyntheticLMStream:
+    """Infinite deterministic stream; host h yields rows
+    [h*B/H, (h+1)*B/H) of the global batch."""
+
+    def __init__(self, cfg: DataConfig):
+        assert cfg.global_batch % cfg.num_hosts == 0
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.trans = rng.integers(2, cfg.vocab_size,
+                                  (cfg.vocab_size,)).astype(np.int32)
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        B = c.global_batch // c.num_hosts
+        rng = np.random.default_rng(
+            np.random.SeedSequence([c.seed, step, c.host_id]))
+        toks = np.zeros((B, c.seq_len), np.int32)
+        toks[:, 0] = rng.integers(2, c.vocab_size, B)
+        for t in range(1, c.seq_len):
+            follow = rng.random(B) < c.markov_p
+            toks[:, t] = np.where(follow, self.trans[toks[:, t - 1]],
+                                  rng.integers(2, c.vocab_size, B))
+        return {"tokens": toks, "labels": toks}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def frontend_stub(cfg: ModelConfig, batch: Dict[str, np.ndarray],
+                  rng: Optional[np.random.Generator] = None):
+    """Attach the modality-frontend stand-ins the VLM/audio archs need
+    (precomputed patch/frame embeddings, per the assignment spec)."""
+    rng = rng or np.random.default_rng(0)
+    B = batch["tokens"].shape[0]
+    if cfg.family == "vlm":
+        batch["patches"] = rng.standard_normal(
+            (B, cfg.num_patches, cfg.d_model)).astype(np.float32) * 0.02
+        batch["labels"] = np.concatenate(
+            [np.full((B, cfg.num_patches), -1, np.int32), batch["labels"]], 1)
+    if cfg.family == "audio":
+        batch["frames"] = rng.standard_normal(
+            (B, cfg.encoder_seq, cfg.d_model)).astype(np.float32) * 0.02
+    return batch

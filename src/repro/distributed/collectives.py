@@ -1,0 +1,116 @@
+"""Collective-traffic accounting from partitioned HLO text.
+
+``cost_analysis()`` does not expose collective bytes, so we parse the
+post-SPMD HLO: every ``all-reduce`` / ``all-gather`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` op's result shape, dtype and replica
+group size, and convert to wire bytes with ring-collective factors:
+
+    all-reduce          2*(n-1)/n * bytes      (ring reduce+broadcast)
+    all-gather          (n-1)/n  * bytes       (result = gathered tensor)
+    reduce-scatter      (n-1)    * bytes       (result = one shard)
+    all-to-all          (n-1)/n  * bytes
+    collective-permute  1.0      * bytes
+
+HLO is per-partition after SPMD, so all byte counts are per-device; divide
+by per-chip ICI bandwidth for the collective roofline term.  NOTE: ops
+inside a rolled ``while`` body appear once — roofline runs unroll the layer
+scan so per-layer collectives are counted exactly (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\])\S*\s+"
+    r"(?P<kind>all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"(?P<rest>[^\n]*)")
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(rest: str, world: int) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return world
+
+
+_FACTORS = {
+    "all-reduce": lambda n: 2 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: float(n - 1),
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def hierarchical_a2a_cost(nbytes_per_device: float, pods: int, per_pod: int,
+                          ici_bw: float = 50e9, dcn_bw: float = 12.5e9):
+    """Two-hop (pod-local first) all-to-all vs flat all-to-all cost model.
+
+    Flat a2a sends (g-1)/g of the buffer over the slowest link class; the
+    hierarchical schedule first exchanges within the pod (fast ICI), then
+    sends one aggregated stream per pod pair over the inter-pod links —
+    cutting cross-pod message count from per_pod^2 to pods-1 streams and
+    keeping (per_pod-1)/per_pod of the traffic on ICI.  Returns
+    (flat_s, hierarchical_s).  Used by the §Perf collective notes and the
+    plan optimizer for multi-pod EP."""
+    g = pods * per_pod
+    flat = nbytes_per_device * (g - 1) / g / dcn_bw
+    intra = nbytes_per_device * (per_pod - 1) / per_pod / ici_bw
+    inter = nbytes_per_device * (pods - 1) / pods / dcn_bw
+    return flat, intra + inter
+
+
+def collective_stats(hlo: str, world: int = 256) -> Dict:
+    """Per-device collective byte totals from partitioned HLO text."""
+    raw = defaultdict(float)
+    wire = defaultdict(float)
+    counts = defaultdict(int)
+    for m in _OP_RE.finditer(hlo):
+        kind = m.group("kind").replace("-start", "")
+        nbytes = _shape_bytes(m.group("shape"))
+        n = _group_size(m.group("rest"), world)
+        if n <= 1:
+            continue
+        counts[kind] += 1
+        raw[kind] += nbytes
+        wire[kind] += nbytes * _FACTORS[kind](n)
+    return {
+        "counts": dict(counts),
+        "raw_bytes": dict(raw),
+        "wire_bytes": dict(wire),
+        "total_wire_bytes": sum(wire.values()),
+    }

@@ -1,0 +1,26 @@
+"""Jitted wrapper: pads sequences to block multiples and dispatches to the
+Pallas kernel (TPU) or the pure-JAX flash path (interpret/CPU)."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_tpu
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=False):
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, max(8, 1 << (Sq - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (Skv - 1).bit_length()))
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    out = flash_attention_tpu(qp, kp, vp, causal=causal, window=window,
+                              block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :Sq]

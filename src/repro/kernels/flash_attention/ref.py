@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from repro.models.flash import naive_attention
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal=True, window=0):
+    B, Sq = q.shape[0], q.shape[1]
+    Skv = k.shape[1]
+    qp = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
+    return naive_attention(q, k, v, qp, kp, causal=causal, window=window)

@@ -1,0 +1,32 @@
+"""Jitted grouped-GEMM MoE FFN: sort -> w1/w3 -> silu*u -> w2 -> unsort."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm.moe_gemm import (grouped_gemm_tpu,
+                                             sort_tokens_by_expert)
+
+
+@partial(jax.jit, static_argnames=("num_experts", "block_t", "interpret"))
+def moe_ffn(xt, expert_ids, vals, w1, w3, w2, *, num_experts, block_t=128,
+            interpret=False):
+    """xt (T, D); expert_ids/vals (T, k); w1/w3 (E, D, F); w2 (E, F, D)."""
+    T, D = xt.shape
+    k = expert_ids.shape[1]
+    flat_ids = expert_ids.reshape(-1)
+    x_rep = jnp.repeat(xt, k, axis=0)
+    xs, block_expert, slot_of, order, valid = sort_tokens_by_expert(
+        x_rep, flat_ids, num_experts, block_t=block_t)
+    g = grouped_gemm_tpu(xs, w1, block_expert, block_t=block_t,
+                         interpret=interpret)
+    u = grouped_gemm_tpu(xs, w3, block_expert, block_t=block_t,
+                         interpret=interpret)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xs.dtype) * u
+    y = grouped_gemm_tpu(h, w2, block_expert, block_t=block_t,
+                         interpret=interpret)
+    # unsort + weighted combine over k choices (slot_of maps original flat
+    # choice order -> padded sorted slot)
+    y_tok = y[slot_of]
+    y_tok = y_tok * vals.reshape(-1)[:, None].astype(y_tok.dtype)
+    return jnp.sum(y_tok.reshape(T, k, -1), axis=1)

@@ -1,0 +1,27 @@
+"""Oracle: per-expert dense loop."""
+import jax.numpy as jnp
+
+
+def ref_grouped_gemm(x, w, block_expert, block_t=128):
+    T = x.shape[0]
+    out = jnp.zeros((T, w.shape[-1]), x.dtype)
+    for i in range(T // block_t):
+        e = int(block_expert[i])
+        sl = slice(i * block_t, (i + 1) * block_t)
+        out = out.at[sl].set((x[sl].astype(jnp.float32)
+                              @ w[e].astype(jnp.float32)).astype(x.dtype))
+    return out
+
+
+def ref_moe_ffn(xt, expert_ids, vals, w1, w3, w2):
+    """Full routed-FFN oracle on unsorted tokens (top-k already chosen)."""
+    import jax
+    T, k = expert_ids.shape
+    out = jnp.zeros((T, w2.shape[-1]), jnp.float32)
+    for e in range(w1.shape[0]):
+        g = jax.nn.silu(xt.astype(jnp.float32) @ w1[e].astype(jnp.float32))
+        u = xt.astype(jnp.float32) @ w3[e].astype(jnp.float32)
+        y = (g * u) @ w2[e].astype(jnp.float32)
+        wmask = jnp.sum(jnp.where(expert_ids == e, vals, 0.0), axis=1)
+        out = out + y * wmask[:, None]
+    return out.astype(xt.dtype)

@@ -1,0 +1,13 @@
+"""Jitted wrapper for the paged-attention decode kernel."""
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention_tpu
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, page_table, lengths, *,
+                    interpret=False):
+    return paged_attention_tpu(q, k_pool, v_pool, page_table, lengths,
+                               interpret=interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: gather pages into a dense cache, run masked softmax."""
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def ref_paged_attention(q, k_pool, v_pool, page_table, lengths):
+    B, H, dh = q.shape
+    num_pages, page, Hkv, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    G = H // Hkv
+    k = k_pool[page_table].reshape(B, max_pages * page, Hkv, dh)
+    v = v_pool[page_table].reshape(B, max_pages * page, Hkv, dh)
+    kf = jnp.repeat(k.astype(jnp.float32), G, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), G, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kf) / math.sqrt(dh)
+    pos = jnp.arange(max_pages * page)[None, :]
+    s = jnp.where((pos < lengths[:, None])[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, vf).astype(q.dtype)

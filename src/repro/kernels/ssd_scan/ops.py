@@ -1,0 +1,10 @@
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_state_scan_tpu
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_state_scan(states, decay, *, interpret=False):
+    return ssd_state_scan_tpu(states, decay, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Oracle: lax.scan state recurrence (same math as models/ssm.ssd_chunked)."""
+import jax
+import jax.numpy as jnp
+
+
+def ref_state_scan(states, decay):
+    B, H, nc, N, P = states.shape
+
+    def f(h, xs):
+        s, d = xs
+        return h * d[..., None, None] + s, h
+
+    s_t = jnp.moveaxis(states.astype(jnp.float32), 2, 0)
+    d_t = jnp.moveaxis(decay.astype(jnp.float32), 2, 0)
+    final, prev = jax.lax.scan(f, jnp.zeros((B, H, N, P), jnp.float32),
+                               (s_t, d_t))
+    return jnp.moveaxis(prev, 0, 2), final

@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run (deliverable e).
+
+Lowers + compiles every (architecture x input shape) cell against the
+production meshes — 16x16 single pod and 2x16x16 multi-pod — and records
+memory_analysis / cost_analysis / collective traffic for the roofline
+(EXPERIMENTS.md §Dry-run / §Roofline).
+
+The XLA_FLAGS line above MUST run before any other jax-importing module:
+jax locks the device count at first init.  Only the dry-run uses 512
+placeholder devices; smoke tests and benchmarks see the 1 real CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # everything
+    ... --arch qwen3_moe_30b --shape train_4k --mesh single --unroll
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, ARCH_IDS, get_config
+from repro.distributed.collectives import collective_stats
+from repro.launch import steps
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import SHAPES, shape_applicable
+
+HW = {  # TPU v5e per chip
+    "peak_flops": 197e12,       # bf16
+    "hbm_bw": 819e9,            # bytes/s
+    "ici_bw": 50e9,             # bytes/s per link
+    "hbm_bytes": 16 * 2**30,
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, unroll: bool,
+             outdir: str):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = f"{arch}.{shape_name}.{'multi' if multi_pod else 'single'}"
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, SHAPES[shape_name])
+    if not ok:
+        rec = {"cell": tag, "status": "skipped", "why": why}
+        _save(outdir, tag, rec)
+        print(f"SKIP {tag}: {why}")
+        return rec
+    t0 = time.time()
+    try:
+        cell = steps.build_cell(arch, shape_name, mesh, unroll=unroll)
+        lowered = cell.lower()
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        colls = collective_stats(hlo, world=mesh.size)
+        hoist = _cpu_bf16_hoist_bytes(hlo)
+        rec = {
+            "cell": tag, "status": "ok", "kind": cell.kind, "note": cell.note,
+            "unrolled": unroll,
+            "mesh": dict(mesh.shape),
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "per_device": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes": (ma.argument_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               + ma.output_size_in_bytes
+                               - ma.alias_size_in_bytes),
+                "flops": ca.get("flops", 0.0),
+                "bytes_accessed": ca.get("bytes accessed", 0.0),
+            },
+            "collectives": colls,
+            "hlo_bytes": len(hlo),
+            # XLA's CPU backend legalizes bf16 dots via f32 operand converts
+            # and hoists whole-stack conversions out of the layer loop; a
+            # TPU backend (native bf16 MXU) allocates none of these.  The
+            # adjusted peak subtracts those identifiable f32 convert
+            # buffers (DESIGN.md §6).
+            "cpu_bf16_hoist_bytes": hoist,
+        }
+        peak = rec["per_device"]["peak_bytes"]
+        adj = max(peak - hoist, 0)
+        rec["per_device"]["peak_bytes_adjusted"] = adj
+        rec["fits_hbm"] = adj < HW["hbm_bytes"]
+        print(f"OK   {tag} lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"peak={peak/2**30:.2f}GiB adj={adj/2**30:.2f}GiB "
+              f"fits={rec['fits_hbm']} "
+              f"coll={colls['total_wire_bytes']/2**20:.1f}MiB")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec = {"cell": tag, "status": "fail", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+        print(f"FAIL {tag}: {type(e).__name__}: {str(e)[:200]}")
+    _save(outdir, tag, rec)
+    return rec
+
+
+import re as _re
+
+_CONVERT_RE = _re.compile(
+    r"%wrapped_convert[^=]*=\s*f32\[([0-9,]+)\]")
+
+
+def _cpu_bf16_hoist_bytes(hlo: str) -> int:
+    """Sum of f32 buffers created by CPU-backend bf16->f32 operand
+    legalization (hoisted whole-tensor converts >= 64 MiB)."""
+    total = 0
+    seen = set()
+    for m in _CONVERT_RE.finditer(hlo):
+        dims = m.group(1)
+        if dims in seen:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 >= 64 * 2**20:
+            seen.add(dims)
+            total += n * 4
+    return total
+
+
+def _save(outdir, tag, rec):
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all' (assigned 10) or 'all+paper'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans for exact per-layer cost analysis")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = (ASSIGNED if args.arch == "all"
+             else ARCH_IDS if args.arch == "all+paper"
+             else [args.arch])
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    t0 = time.time()
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_cell(arch, shape, mp, args.unroll,
+                                        args.outdir))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed "
+          f"in {time.time()-t0:.0f}s ==")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Production serving driver: builds the decode cell for an (arch, shape),
+runs the batch engine loop.  On this CPU container use --reduced to
+actually execute; full configs are exercised through dryrun.py.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
+from repro.runtime.api import BatchMaster, BatchRequest
+from repro.runtime.engine import NodeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-active", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    engines = [NodeEngine(cfg, node_id=i, max_active=args.max_active,
+                          max_len=256, page_size=args.page_size)
+               for i in range(args.nodes)]
+    master = BatchMaster(engines, SchedulerConfig(page_size=args.page_size))
+    rng = np.random.default_rng(0)
+    reqs = [BatchRequest(custom_id=f"r{i}",
+                         prompt=list(rng.integers(2, cfg.vocab_size, 8)),
+                         max_tokens=int(rng.integers(4, 48)))
+            for i in range(args.requests)]
+    bid = master.submit(reqs)
+    bo = master.run(bid)
+    print(f"{bo.id}: {bo.request_counts} BCT={bo.bct_s:.2f}s")
+    for i, e in enumerate(engines):
+        print(f"node{i}: {e.stats.counts} decode_steps={e.decode_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Paged KV storage: host store (single source of truth) + device slot pool.
+
+Paper §5.2: host memory holds parameters and the KV cache of *every*
+sequence scheduled to a node; the device holds only the active working set.
+YIELD checkpoints a sequence's device state to host pages; COMBINE restores
+it into a free device slot.  Token-indexed cache leaves (k/v/ckv/kr) are
+paged at ``page_size`` tokens; fixed-size state (SSM state, conv stubs,
+ring caches) is stored whole.
+
+On this CPU container "host" is NumPy and "device" is the jax array holding
+the engine's dense decode cache; on a real TPU deployment the same classes
+wrap pinned host buffers + device_put/device_get with async staging through
+the ring buffer (memory/buffers.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+PAGED_LEAVES = ("k", "v", "ckv", "kr")  # token-indexed (dim 1 = position)
+
+
+@dataclasses.dataclass
+class SeqState:
+    """Host-resident state of one sequence (paged)."""
+    seq_id: int
+    length: int = 0                       # tokens represented in KV
+    pages: Dict[str, List[np.ndarray]] = dataclasses.field(default_factory=dict)
+    whole: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def nbytes(self) -> int:
+        n = sum(p.nbytes for ps in self.pages.values() for p in ps)
+        return n + sum(w.nbytes for w in self.whole.values())
+
+
+class HostKVStore:
+    """Per-node unified host store; page granularity = P tokens."""
+
+    def __init__(self, page_size: int = 64):
+        self.page_size = page_size
+        self.seqs: Dict[int, SeqState] = {}
+
+    # -- bookkeeping --------------------------------------------------------
+    def has(self, seq_id: int) -> bool:
+        return seq_id in self.seqs
+
+    def nbytes(self) -> int:
+        return sum(s.nbytes() for s in self.seqs.values())
+
+    def num_pages(self, seq_id: int) -> int:
+        s = self.seqs[seq_id]
+        return max((len(ps) for ps in s.pages.values()), default=0)
+
+    def drop(self, seq_id: int):
+        self.seqs.pop(seq_id, None)
+
+    # -- checkpoint (YIELD) -------------------------------------------------
+    def checkpoint(self, seq_id: int, cache_slices: Dict[str, np.ndarray],
+                   length: int):
+        """Store a sequence's cache arrays.  Paged leaves have layout
+        (L, S, ...) with S = positions; only the first `length` positions are
+        persisted, page by page."""
+        st = self.seqs.setdefault(seq_id, SeqState(seq_id))
+        st.length = length
+        P = self.page_size
+        for name, arr in cache_slices.items():
+            if name in PAGED_LEAVES:
+                pages = []
+                for start in range(0, length, P):
+                    end = min(start + P, length)
+                    page = np.zeros((arr.shape[0], P) + arr.shape[2:],
+                                    arr.dtype)
+                    page[:, : end - start] = arr[:, start:end]
+                    pages.append(page)
+                st.pages[name] = pages
+            else:
+                st.whole[name] = np.array(arr)
+
+    # -- incremental append (async KV propagation, §5.3 Sync phase) --------
+    def append_tokens(self, seq_id: int, new_slices: Dict[str, np.ndarray],
+                      start: int):
+        """Propagate freshly decoded KV entries (device -> host)."""
+        st = self.seqs[seq_id]
+        P = self.page_size
+        n_new = next(iter(new_slices.values())).shape[1]
+        for name, arr in new_slices.items():
+            if name not in PAGED_LEAVES:
+                st.whole[name] = np.array(arr)
+                continue
+            pages = st.pages.setdefault(name, [])
+            for i in range(n_new):
+                pos = start + i
+                pidx, off = divmod(pos, P)
+                while len(pages) <= pidx:
+                    pages.append(np.zeros((arr.shape[0], P) + arr.shape[2:],
+                                          arr.dtype))
+                pages[pidx][:, off] = arr[:, i]
+        st.length = max(st.length, start + n_new)
+
+    # -- restore (COMBINE) --------------------------------------------------
+    def restore(self, seq_id: int, max_len: int) -> Dict[str, np.ndarray]:
+        """Materialize dense (L, max_len, ...) arrays from pages."""
+        st = self.seqs[seq_id]
+        P = self.page_size
+        out = {}
+        for name, pages in st.pages.items():
+            if not pages:
+                continue
+            proto = pages[0]
+            full = np.zeros((proto.shape[0], max_len) + proto.shape[2:],
+                            proto.dtype)
+            for pidx, page in enumerate(pages):
+                start = pidx * P
+                end = min(start + P, max_len)
+                if start >= max_len:
+                    break
+                full[:, start:end] = page[:, : end - start]
+            out[name] = full
+        out.update({k: v.copy() for k, v in st.whole.items()})
+        return out

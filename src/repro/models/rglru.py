@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Train/prefill evaluate the linear recurrence with an associative scan;
+decode is an O(1) step.  Gates are block-diagonal (official
+BlockDiagonalLinear) with ``RG_BLOCKS=16`` blocks so each block lives on one
+model shard (RecurrentGemma uses num_heads=10 blocks; 10 does not divide the
+16-wide model axis — recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelConfig
+from repro.models import layers
+from repro.models.ssm import _causal_conv, _conv_step
+
+RG_BLOCKS = 16
+_C = 8.0  # RG-LRU temperature
+
+
+def init_rglru(cfg: ModelConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    D, W = cfg.d_model, cfg.lru_width
+    K = 4
+    nb, wb = RG_BLOCKS, cfg.lru_width // RG_BLOCKS
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(D)
+    # Lambda init so that a^c in [0.9, 0.999] (official init range)
+    u = jax.random.uniform(ks[0], (W,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * _C)) - 1.0)  # softplus^-1(-log u /2c)
+    return {
+        "wx": (jax.random.normal(ks[1], (D, W)) * sc).astype(dt),
+        "wgate": (jax.random.normal(ks[2], (D, W)) * sc).astype(dt),
+        "conv": (jax.random.normal(ks[3], (K, W)) / math.sqrt(K)).astype(dt),
+        "Wa": (jax.random.normal(ks[4], (nb, wb, wb)) / math.sqrt(wb)).astype(dt),
+        "ba": jnp.zeros((nb, wb), dt),
+        "Wi": (jax.random.normal(ks[5], (nb, wb, wb)) / math.sqrt(wb)).astype(dt),
+        "bi": jnp.zeros((nb, wb), dt),
+        "lam": lam,
+        "wout": (jax.random.normal(key, (W, D)) / math.sqrt(W)
+                 / math.sqrt(max(cfg.num_layers, 1))).astype(dt),
+    }
+
+
+def _block_diag(u, W, b):
+    """u (B,S,width) @ block-diag W (nb,wb,wb) + b."""
+    B, S, width = u.shape
+    nb, wb = W.shape[0], W.shape[1]
+    ub = u.reshape(B, S, nb, wb)
+    return (jnp.einsum("bsnw,nwv->bsnv", ub, W) + b).reshape(B, S, width)
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(_block_diag(u, p["Wa"], p["ba"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(u, p["Wi"], p["bi"]).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lam"])                 # (B,S,W) ≤ 0
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, mult * i * u.astype(jnp.float32)
+
+
+def rglru_fwd(cfg: ModelConfig, p, x, *, return_state=False):
+    """Full-sequence RG-LRU block. x (B,S,D) -> (B,S,D)."""
+    gate = jnp.einsum("bsd,dw->bsw", x, p["wgate"])
+    uraw = jnp.einsum("bsd,dw->bsw", x, p["wx"])
+    u = jax.nn.silu(_causal_conv(uraw, p["conv"]))
+    a, bterm = _gates(p, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    h = h.astype(x.dtype)
+    y = h * jax.nn.gelu(gate, approximate=True)
+    out = jnp.einsum("bsw,wd->bsd", y, p["wout"])
+    if return_state:
+        K = p["conv"].shape[0]
+        return out, {"state": h[:, -1].astype(jnp.float32),
+                     "conv": uraw[:, x.shape[1] - (K - 1):, :]}
+    return out
+
+
+def rglru_decode(cfg: ModelConfig, p, x, cache):
+    """One-token step. x (B,1,D); cache {state (B,W) fp32, conv (B,K-1,W)}."""
+    gate = jnp.einsum("bsd,dw->bsw", x, p["wgate"])
+    uraw = jnp.einsum("bsd,dw->bsw", x, p["wx"])
+    u, conv_c = _conv_step(uraw, cache["conv"], p["conv"])
+    u = jax.nn.silu(u)
+    a, bterm = _gates(p, u)                                      # (B,1,W)
+    h = cache["state"] * a[:, 0] + bterm[:, 0]
+    y = h[:, None, :].astype(x.dtype) * jax.nn.gelu(gate, approximate=True)
+    out = jnp.einsum("bsw,wd->bsd", y, p["wout"])
+    return out, {"state": h, "conv": conv_c}
+
+
+def init_rglru_cache(cfg: ModelConfig, B: int, dtype=jnp.bfloat16):
+    K = 4
+    return {"state": jnp.zeros((B, cfg.lru_width), jnp.float32),
+            "conv": jnp.zeros((B, K - 1, cfg.lru_width), dtype)}

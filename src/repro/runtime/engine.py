@@ -1,0 +1,205 @@
+"""Per-node batch-inference engine: real JAX execution + coroutine slots.
+
+One NodeEngine = one node's GPU pool.  It owns a dense device decode cache
+with `max_active` sequence slots, a paged host store (single source of
+truth, §5.2), a page allocator (two-page lazy allocation), and jitted
+prefill/decode steps.  The CoroutineScheduler drives it exclusively through
+the slot protocol, so the exact same scheduling code also drives the
+cluster simulator.
+
+Supports dense and MoE families (caches {"k","v"}); set
+``module_granularity=True`` to decode through the Algorithm-1 module
+runtime (per-sub-batch attention + COMBINE before MoE) instead of the
+monolithic decode_step.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coroutine import Phase, SequenceCoroutine, Status
+from repro.core.forward import ModuleRuntime
+from repro.core.primitives import PrimitiveStats
+from repro.memory.allocator import PageAllocator
+from repro.memory.paged_kv import HostKVStore
+from repro.models import transformer as T
+from repro.models.api import MeshAxes, ModelConfig
+
+
+class NodeEngine:
+    def __init__(self, cfg: ModelConfig, *, node_id: int = 0,
+                 max_active: int = 8, max_len: int = 256,
+                 page_size: int = 32, num_devices: int = 8,
+                 device_pages: Optional[int] = None,
+                 module_granularity: bool = False, b_attn: int = 0,
+                 seed: int = 0):
+        assert cfg.family in ("dense", "moe") and cfg.sliding_window == 0, \
+            "mini-engine supports dense/moe caches; see cluster sim for rest"
+        self.cfg = cfg
+        self.axes = MeshAxes(batch=("data",), model="model")
+        self.node_id = node_id
+        self.max_active = max_active
+        self.max_len = max_len
+        self.num_devices = num_devices
+        self.page_size = page_size
+
+        self.params = T.init_params(cfg, jax.random.PRNGKey(seed))
+        self.host_store = HostKVStore(page_size)
+        total_pages = device_pages or (max_active * max_len // page_size * 2)
+        self.allocator = PageAllocator(total_pages, page_size)
+        self.stats = PrimitiveStats()
+
+        # device slot arrays
+        self.cache = T.init_cache(cfg, max_active, max_len)
+        self.tokens = jnp.zeros((max_active,), jnp.int32)
+        self.lengths = jnp.zeros((max_active,), jnp.int32)
+        self.slot_owner: List[Optional[int]] = [None] * max_active
+        self.synced_len: Dict[int, int] = {}
+
+        self._decode = jax.jit(
+            lambda p, c, t, l: T.decode_step(cfg, self.axes, p, c, t, l),
+            donate_argnums=(1,))
+        self._prefill_cache: Dict[int, object] = {}
+        self.module_rt = (ModuleRuntime(cfg, self.axes, self.params)
+                          if module_granularity else None)
+        self.b_attn = b_attn or max_active
+        self.decode_steps = 0
+        self.prefill_tokens = 0
+
+    # ------------------------------------------------------------- protocol
+    def clock(self) -> float:
+        return time.monotonic()
+
+    def idle_tick(self):
+        pass
+
+    def acquire_slot(self, co: SequenceCoroutine) -> Optional[int]:
+        if not self.allocator.can_admit(2):
+            return None
+        for s, owner in enumerate(self.slot_owner):
+            if owner is None:
+                self.slot_owner[s] = co.seq_id
+                self.allocator.alloc(co.seq_id, 2)
+                return s
+        return None
+
+    def free_slot(self, co: SequenceCoroutine):
+        if co.slot is not None and self.slot_owner[co.slot] == co.seq_id:
+            self.slot_owner[co.slot] = None
+            self.lengths = self.lengths.at[co.slot].set(0)
+
+    def extract_slot(self, co: SequenceCoroutine) -> Dict[str, np.ndarray]:
+        s = co.slot
+        return {name: np.asarray(leaf[:, s]) for name, leaf in
+                self.cache.items()}
+
+    def install_slot(self, co: SequenceCoroutine, slices: Dict[str, np.ndarray]):
+        s = co.slot
+        for name, arr in slices.items():
+            if name not in self.cache:
+                continue
+            leaf = self.cache[name]
+            pad = leaf.shape[2] - arr.shape[1]
+            a = np.pad(arr, [(0, 0), (0, pad)] + [(0, 0)] * (arr.ndim - 2)) \
+                if pad > 0 else arr[:, : leaf.shape[2]]
+            self.cache[name] = leaf.at[:, s].set(jnp.asarray(a, leaf.dtype))
+        self.tokens = self.tokens.at[s].set(co.last_token)
+        self.lengths = self.lengths.at[s].set(co.length)
+        self.synced_len[co.seq_id] = co.length
+
+    def reconfigure_partition(self, co: SequenceCoroutine, group: List[int]):
+        # On TPU: re-lower the decode step over the group mesh (sequence-
+        # split KV).  Single-host CPU: bookkeeping only; the cluster
+        # simulator models the speedup (runtime/cluster.py).
+        pass
+
+    # ------------------------------------------------------------- compute
+    def decode_page(self, active: Sequence[SequenceCoroutine], P: int):
+        """Decode up to P tokens for every active sequence."""
+        by_slot = {c.slot: c for c in active}
+        steps = min(P, max(c.remaining for c in active))
+        for _ in range(steps):
+            if self.module_rt is not None:
+                nxt, self.cache = self.module_rt.forward_decode(
+                    self.tokens, self.cache, self.lengths, self.b_attn)
+            else:
+                nxt, self.cache = self._decode(self.params, self.cache,
+                                               self.tokens, self.lengths)
+            self.decode_steps += 1
+            nxt_np = np.asarray(nxt)
+            upd_tok, upd_len = [], []
+            for s, co in by_slot.items():
+                if co.remaining > 0:
+                    tok = int(nxt_np[s])
+                    co.generated.append(tok)
+                    co.last_token = tok
+                    co.length += 1
+                    upd_tok.append((s, tok))
+                    upd_len.append((s, co.length))
+            if upd_tok:
+                idx = jnp.array([s for s, _ in upd_tok])
+                self.tokens = self.tokens.at[idx].set(
+                    jnp.array([t for _, t in upd_tok], jnp.int32))
+                self.lengths = self.lengths.at[idx].set(
+                    jnp.array([l for _, l in upd_len], jnp.int32))
+            if all(c.remaining == 0 for c in active):
+                break
+
+    def sync_appends(self, active: Sequence[SequenceCoroutine]):
+        """Propagate freshly decoded KV entries to the host store (§5.3 i)."""
+        for co in active:
+            start = self.synced_len.get(co.seq_id, 0)
+            if co.length <= start or co.slot is None:
+                continue
+            slices = {name: np.asarray(leaf[:, co.slot, start:co.length])
+                      for name, leaf in self.cache.items()}
+            if self.host_store.has(co.seq_id):
+                self.host_store.append_tokens(co.seq_id, slices, start)
+            else:
+                full = {name: np.asarray(leaf[:, co.slot, :co.length])
+                        for name, leaf in self.cache.items()}
+                self.host_store.checkpoint(co.seq_id, full, co.length)
+            self.synced_len[co.seq_id] = co.length
+
+    def prefill(self, cos: Sequence[SequenceCoroutine]):
+        """Prefill a batch of INIT coroutines; leaves them INACTIVE with KV
+        checkpointed to the host store (paper Fig. 7 prefill flow)."""
+        if not cos:
+            return
+        maxlen = max(c.prompt_len for c in cos)
+        S = max(1 << (maxlen - 1).bit_length(), 8)  # pow2 bucket
+        B = len(cos)
+        toks = np.zeros((B, S), np.int32)           # left-align, pad after
+        last_idx = np.zeros((B,), np.int32)
+        for i, c in enumerate(cos):
+            toks[i, : c.prompt_len] = c.prompt[:]
+            last_idx[i] = c.prompt_len - 1
+        key = (B, S)
+        if key not in self._prefill_cache:
+            def _prefill_impl(params, tokens, last):
+                h, _, caches = T._backbone(self.cfg, self.axes, params,
+                                           {"tokens": tokens}, None, True,
+                                           False)   # h is final-normed
+                hl = jnp.take_along_axis(h, last[:, None, None].astype(
+                    jnp.int32).repeat(h.shape[-1], -1), axis=1)
+                logits = T.logits_fn(self.cfg, params, hl)
+                return logits, caches
+            self._prefill_cache[key] = jax.jit(_prefill_impl)
+        logits, cache = self._prefill_cache[key](
+            self.params, jnp.asarray(toks), jnp.asarray(last_idx))
+        logits_np = np.asarray(logits)
+        for i, co in enumerate(cos):
+            slices = {name: np.asarray(leaf[:, i, : co.prompt_len])
+                      for name, leaf in cache.items()}
+            self.host_store.checkpoint(co.seq_id, slices, co.prompt_len)
+            co.last_token = int(np.argmax(logits_np[i, 0]))
+            co.generated.append(co.last_token)
+            co.length = co.prompt_len
+            co.phase = Phase.DECODING
+            co.status = Status.INACTIVE
+            self.synced_len[co.seq_id] = co.prompt_len
+            self.prefill_tokens += co.prompt_len

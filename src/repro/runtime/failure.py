@@ -1,0 +1,77 @@
+"""Health monitoring + failure recovery policy (paper §5.6).
+
+Per-node heartbeats carry every device's status; a node missing
+``dead_after`` consecutive heartbeats is declared failed and its sequences
+are recovered by the migrate-vs-recompute cost model (the performance model
+estimates both and picks the faster path — implemented in
+runtime/cluster.py::Cluster.fail_node).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.core import plan as plan_lib
+from repro.models.api import ModelConfig
+
+
+@dataclasses.dataclass
+class DeviceStatus:
+    device_id: int
+    healthy: bool = True
+    hbm_used: float = 0.0
+    temperature_c: float = 55.0
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    node: int
+    t: float
+    devices: List[DeviceStatus]
+
+    @property
+    def healthy(self) -> bool:
+        return all(d.healthy for d in self.devices)
+
+
+class HealthMonitor:
+    def __init__(self, nodes: int, *, interval_s: float = 5.0,
+                 dead_after: int = 3):
+        self.interval = interval_s
+        self.dead_after = dead_after
+        self.last_ok: Dict[int, float] = {n: 0.0 for n in range(nodes)}
+        self.failed: Dict[int, bool] = {n: False for n in range(nodes)}
+        self.on_failure: Optional[Callable[[int], None]] = None
+
+    def report(self, hb: Heartbeat):
+        if hb.healthy:
+            self.last_ok[hb.node] = hb.t
+        self._check(hb.t)
+
+    def _check(self, now: float):
+        for n, t_ok in self.last_ok.items():
+            if self.failed[n]:
+                continue
+            if now - t_ok > self.dead_after * self.interval:
+                self.failed[n] = True
+                if self.on_failure is not None:
+                    self.on_failure(n)
+
+    def alive(self) -> List[int]:
+        return [n for n, f in self.failed.items() if not f]
+
+
+def recovery_choice(cfg: ModelConfig, hw: plan_lib.Hardware, *,
+                    kv_len: int, prompt_len: int,
+                    inter_node_bw: float = 25e9) -> str:
+    """migrate vs recompute: transfer time of the KV snapshot vs re-prefill
+    time (paper: 'migrating hundreds of gigabytes may be slower than
+    regenerating')."""
+    from repro.runtime.cluster import kv_bytes_per_token
+
+    t_migrate = kv_len * kv_bytes_per_token(cfg) / inter_node_bw
+    plan = plan_lib.Plan(1, 1, False, False, 0, 0.0)
+    t_recompute = plan_lib.step_time(cfg, hw, plan, 1, kv_len,
+                                     max(kv_len, prompt_len))
+    return "migrate" if t_migrate < t_recompute else "recompute"

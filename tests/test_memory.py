@@ -1,0 +1,80 @@
+"""Property-based tests (hypothesis) on the memory subsystem invariants:
+paged host store roundtrips, allocator conservation, eviction policy."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.memory.allocator import PageAllocator
+from repro.memory.paged_kv import HostKVStore
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@given(length=st.integers(1, 200), page=st.integers(1, 64),
+       extra=st.integers(0, 50))
+@SET
+def test_checkpoint_restore_roundtrip(length, page, extra):
+    store = HostKVStore(page)
+    arr = np.arange(3 * (length + extra) * 4, dtype=np.float32).reshape(
+        3, length + extra, 4)
+    store.checkpoint(7, {"k": arr[:, :length + extra]}, length)
+    out = store.restore(7, max_len=length + extra + 5)
+    np.testing.assert_array_equal(out["k"][:, :length], arr[:, :length])
+    # positions beyond `length` are zero (not leaked from the padded page)
+    assert np.all(out["k"][:, length + (-length) % page:] == 0)
+
+
+@given(n_appends=st.integers(1, 20), page=st.integers(1, 16))
+@SET
+def test_incremental_append_equals_bulk(n_appends, page):
+    """Appending token-by-token == one bulk checkpoint (host is the single
+    source of truth under the §5.3 Sync phase)."""
+    rng = np.random.default_rng(1)
+    chunks = [rng.standard_normal((2, 1, 3)).astype(np.float32)
+              for _ in range(n_appends)]
+    full = np.concatenate(chunks, axis=1)
+    a = HostKVStore(page)
+    a.checkpoint(1, {"k": full[:, :0]}, 0)
+    for i, c in enumerate(chunks):
+        a.append_tokens(1, {"k": c}, i)
+    b = HostKVStore(page)
+    b.checkpoint(1, {"k": full}, n_appends)
+    ra = a.restore(1, n_appends)
+    rb = b.restore(1, n_appends)
+    np.testing.assert_allclose(ra["k"], rb["k"])
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 9), st.integers(1, 4)),
+                    max_size=40))
+@SET
+def test_allocator_conservation(ops):
+    """free + sum(owned) == total after any alloc/free interleaving."""
+    al = PageAllocator(total_pages=32, page_size=8)
+    for seq, n in ops:
+        if al.pages_of(seq) and n % 2 == 0:
+            al.free_seq(seq)
+        else:
+            al.alloc(seq, n)
+        owned = sum(len(v) for v in al.owned.values())
+        assert owned + len(al.free) == al.total
+        assert len(set(al.free)) == len(al.free)          # no double-free
+        all_pages = sorted(al.free + [p for v in al.owned.values()
+                                      for p in v])
+        assert all_pages == list(range(al.total))          # no lost pages
+
+
+@given(lengths=st.dictionaries(st.integers(0, 15), st.integers(1, 500),
+                               min_size=1, max_size=10))
+@SET
+def test_eviction_most_progress_first(lengths):
+    al = PageAllocator(total_pages=8, page_size=8)
+    for s in lengths:
+        al.alloc(s, 1)
+        if not al.free:
+            break
+    evicted = al.ensure_two_pages(lengths)
+    # invariant: evicted sequences have decoded length >= any survivor that
+    # was eligible (most-progress-first, §5.3)
+    survivors = [s for s in lengths if s not in evicted and al.pages_of(s)]
+    if evicted and survivors:
+        assert max(lengths[s] for s in survivors) <= max(
+            lengths[e] for e in evicted)

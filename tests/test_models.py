@@ -1,0 +1,197 @@
+"""Unit tests for model layers: attention equivalences, RoPE, SSD, RG-LRU,
+MoE capacity behaviour, prefill->decode consistency per family."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, reduced_config
+from repro.models import layers, flash, moe as moe_lib, ssm as ssm_lib, rglru
+from repro.models import transformer as T
+from repro.models.api import MeshAxes
+
+AXES = MeshAxes()
+
+
+def _batch(cfg, rng, B=2, S=32):
+    tokens = jnp.asarray(rng.integers(2, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.ones((B, cfg.num_patches, cfg.d_model),
+                                    jnp.bfloat16)
+        batch["labels"] = jnp.concatenate(
+            [jnp.full((B, cfg.num_patches), -1, jnp.int32), tokens], 1)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model),
+                                   jnp.bfloat16)
+    return batch
+
+
+# ---------------------------------------------------------------- attention
+
+
+@pytest.mark.parametrize("H,Hkv,causal,window",
+                         [(4, 4, True, 0), (4, 2, True, 0), (6, 2, False, 0),
+                          (4, 1, True, 16), (8, 4, True, 7)])
+def test_flash_matches_naive(rng, H, Hkv, causal, window):
+    B, Sq, dh = 2, 64, 16
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Sq, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Sq, Hkv, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    out = layers.chunked_attention(q, k, v, pos, pos, causal=causal,
+                                   window=window, chunk=16)
+    ref = flash.naive_attention(q, k, v, pos, pos, causal=causal,
+                                window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_flash_vjp_matches_autodiff(rng):
+    B, S, H, Hkv, dh = 1, 32, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def f_flash(q, k, v):
+        return jnp.sum(layers.chunked_attention(q, k, v, pos, pos,
+                                                chunk=8) ** 2)
+
+    def f_naive(q, k, v):
+        return jnp.sum(flash.naive_attention(q, k, v, pos, pos) ** 2)
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=5e-4, rtol=1e-3)
+
+
+def test_decode_matches_prefix_attention(rng):
+    """One-token decode vs full-sequence attention on the same prefix."""
+    B, S, H, Hkv, dh = 2, 16, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, 1, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    lengths = jnp.array([S, S - 5], jnp.int32)
+    out = layers.decode_attention(q, k, v, lengths)
+    # oracle: mask positions >= length
+    qpos = (lengths - 1)[:, None]
+    kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ref = flash.naive_attention(q, k, v, qpos, kpos, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_rope_rotation_invariance(rng):
+    """RoPE preserves norms and relative-position dot products."""
+    x = jnp.asarray(rng.standard_normal((1, 8, 2, 16)), jnp.float32)
+    pos = jnp.arange(8, dtype=jnp.int32)[None]
+    r = layers.rope(x, pos, 10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(r, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 16)), jnp.float32)
+    def dot(i, j):
+        qi = layers.rope(q, jnp.array([[i]], jnp.int32), 10000.0)
+        kj = layers.rope(k, jnp.array([[j]], jnp.int32), 10000.0)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot(3, 1) - dot(7, 5)) < 1e-4
+
+
+# ---------------------------------------------------------------- SSM / LRU
+
+
+def test_ssd_chunked_matches_stepwise(rng):
+    cfg = reduced_config("mamba2_370m")
+    p = ssm_lib.init_ssm(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 32
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    full = ssm_lib.ssm_fwd(cfg, p, x, chunk=8)
+    # step-by-step recurrence must agree
+    cache = ssm_lib.init_ssm_cache(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = ssm_lib.ssm_decode(cfg, p, x[:, t : t + 1], cache)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               atol=2e-3, rtol=1e-2)
+
+
+def test_rglru_scan_matches_stepwise(rng):
+    cfg = reduced_config("recurrentgemma_2b")
+    p = rglru.init_rglru(cfg, jax.random.PRNGKey(2))
+    B, S = 2, 16
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    full = rglru.rglru_fwd(cfg, p, x)
+    cache = rglru.init_rglru_cache(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = rglru.rglru_decode(cfg, p, x[:, t : t + 1], cache)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               atol=2e-3, rtol=1e-2)
+
+
+# ---------------------------------------------------------------- MoE
+
+
+def test_moe_capacity_matches_ref_when_uncapped(rng):
+    cfg = reduced_config("qwen3_moe_30b")
+    p = moe_lib.init_moe(cfg, jax.random.PRNGKey(3))
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    y, aux = moe_lib.moe_fwd(cfg, AXES, p, x)
+    ref = moe_lib.moe_ref(cfg, p, x)
+    # cf=2.0 in reduced config -> no drops for near-uniform routing
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=5e-3,
+                               rtol=5e-2)
+    assert float(aux) > 0.5     # aux loss ~1 for near-uniform routing
+
+
+# ------------------------------------------------- prefill/decode agreement
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "qwen2_0_5b", "mamba2_370m",
+                                  "recurrentgemma_2b", "phi3_5_moe",
+                                  "whisper_base", "h2o_danube_1_8b"])
+def test_prefill_then_decode_matches_forward(arch, rng):
+    """Greedy decode continuing from the prefill cache must equal argmax of
+    teacher-forced forward logits (one step)."""
+    cfg = reduced_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch(cfg, rng, B, S)
+    logits_p, cache_p = T.prefill(cfg, AXES, params, batch)
+    # init a decode cache of larger size and install the prefill cache
+    dc = T.init_cache(cfg, B, 64)
+
+    def install(d, c):
+        for key in d:
+            if isinstance(d[key], dict):
+                install(d[key], c[key])
+            elif d[key].ndim >= 3 and c[key].shape[2] <= d[key].shape[2] \
+                    and d[key].shape[2] >= S:
+                d[key] = d[key].at[:, :, : c[key].shape[2]].set(c[key])
+            else:
+                d[key] = c[key] if c[key].shape == d[key].shape else d[key]
+
+    if cfg.family in ("dense", "moe") and cfg.sliding_window == 0:
+        install(dc, cache_p)
+        tok = jnp.argmax(logits_p[:, 0], -1).astype(jnp.int32)
+        lens = jnp.full((B,), S, jnp.int32)
+        nxt, _ = T.decode_step(cfg, AXES, params, dc, tok, lens)
+        # teacher-forced forward with the predicted token appended
+        toks2 = jnp.concatenate([batch["tokens"], tok[:, None]], 1)
+        b2 = dict(batch)
+        b2["tokens"] = toks2
+        b2["labels"] = toks2
+        h, _, _ = T._backbone(cfg, AXES, params, b2, None, False, False)
+        ref = jnp.argmax(T.logits_fn(cfg, params, h[:, -1:])[:, 0], -1)
+        np.testing.assert_array_equal(np.asarray(nxt), np.asarray(ref))
+    else:
+        # structural check: shapes + finiteness for the exotic families
+        assert bool(jnp.all(jnp.isfinite(logits_p)))

@@ -1,0 +1,74 @@
+"""Roofline-harness unit tests: collective-HLO parsing, ring factors,
+attention-scan correction consistency, plan cost monotonicity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.collectives import collective_stats
+from repro.models import layers, flash
+
+HLO = """
+ENTRY main {
+  %p = bf16[8,4096,2048]{2,1,0} parameter(0)
+  %ar = bf16[8,4096,2048]{2,1,0} all-reduce(%p), replica_groups=[32,16]<=[512], to_apply=%add
+  %ag = f32[256,1024]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[16,1024]{1,0} reduce-scatter(%y), replica_groups=[2,256]<=[512], to_apply=%add
+  %a2a = bf16[64,128]{1,0} all-to-all(%z), replica_groups=[32,16]<=[512]
+  %cp = s32[128]{0} collective-permute(%w), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_collective_parser_counts_and_factors():
+    st = collective_stats(HLO, world=512)
+    assert st["counts"] == {"all-reduce": 1, "all-gather": 1,
+                            "reduce-scatter": 1, "all-to-all": 1,
+                            "collective-permute": 1}
+    ar = 8 * 4096 * 2048 * 2
+    assert st["raw_bytes"]["all-reduce"] == ar
+    np.testing.assert_allclose(st["wire_bytes"]["all-reduce"],
+                               ar * 2 * 15 / 16)
+    ag = 256 * 1024 * 4
+    np.testing.assert_allclose(st["wire_bytes"]["all-gather"], ag * 3 / 4)
+    rs = 16 * 1024 * 4
+    np.testing.assert_allclose(st["wire_bytes"]["reduce-scatter"], rs * 255)
+    assert st["wire_bytes"]["collective-permute"] == 128 * 4
+
+
+def test_attention_chunk_invariance():
+    """The correction model assumes chunking never changes results: the
+    flash output must be identical for any chunk size (incl. nc=1)."""
+    rng = np.random.default_rng(0)
+    B, S, H, Hkv, dh = 1, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    full = layers.chunked_attention(q, k, v, pos, pos, chunk=64)  # nc=1
+    for c in (8, 16, 32):
+        out = layers.chunked_attention(q, k, v, pos, pos, chunk=c)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                   atol=2e-5)
+
+
+def test_ideal_decode_bytes_orders():
+    from benchmarks.roofline import ideal_decode_bytes
+    from repro.configs import get_config
+
+    full = ideal_decode_bytes(get_config("llama3_2_1b"), "decode_32k", 256)
+    swa = ideal_decode_bytes(get_config("h2o_danube_1_8b"), "decode_32k", 256)
+    ssm = ideal_decode_bytes(get_config("mamba2_370m"), "long_500k", 256)
+    # SWA bounds cache traffic far below full attention at same class size;
+    # SSM long-context state is tiny
+    assert swa < full
+    assert ssm < 1e9
+
+
+def test_hierarchical_a2a_beats_flat():
+    from repro.distributed.collectives import hierarchical_a2a_cost
+
+    flat, hier = hierarchical_a2a_cost(1e9, pods=2, per_pod=256)
+    assert hier < flat          # pod-local-first always wins cross-pod
+    # single pod: degenerates to pure ICI
+    flat1, hier1 = hierarchical_a2a_cost(1e9, pods=1, per_pod=256)
+    assert hier1 <= flat1

@@ -1,16 +1,38 @@
-"""Shared benchmark helpers: CSV emission + cluster construction."""
+"""Shared benchmark helpers: CSV emission, BENCH_*.json output, timing."""
 from __future__ import annotations
 
+import json
 import time
-from typing import List
+from typing import Dict, List
 
 ROWS: List[str] = []
+WRITTEN: List[str] = []     # BENCH_*.json paths written this process
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
     print(row)
+
+
+def write_json(name: str, payload: Dict) -> str:
+    """Write machine-readable results to ``BENCH_<name>.json`` (cwd) so the
+    perf trajectory is diffable across PRs."""
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    WRITTEN.append(path)
+    print(f"# wrote {path}")
+    return path
+
+
+def rows_as_dicts(rows: List[str]) -> List[Dict]:
+    out = []
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        out.append({"name": name, "us_per_call": float(us),
+                    "derived": derived})
+    return out
 
 
 def timed(fn, *args, repeat=3, **kw):

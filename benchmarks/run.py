@@ -1,5 +1,7 @@
 """Benchmark harness entry point (deliverable d): one module per paper
-table/figure.  Prints ``name,us_per_call,derived`` CSV rows.
+table/figure.  Prints ``name,us_per_call,derived`` CSV rows and writes one
+machine-readable ``BENCH_<table>.json`` per table (rows + whatever payload
+the table's ``run()`` returns), so every benchmark is diffable across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [table ...]
 """
@@ -8,9 +10,10 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (cluster_scaling, expert_batching, limited_memory,
-                        offline_bct, pd_disagg, primitives, slo_scaling)
-from benchmarks.common import ROWS
+from benchmarks import (cluster_scaling, decode_throughput, expert_batching,
+                        limited_memory, offline_bct, pd_disagg, primitives,
+                        slo_scaling)
+from benchmarks.common import ROWS, WRITTEN, rows_as_dicts, write_json
 
 TABLES = {
     "t2_primitives": primitives.run,
@@ -20,6 +23,7 @@ TABLES = {
     "t6_pd_disagg": pd_disagg.run,
     "t7_limited_memory": limited_memory.run,
     "f2b_expert_batching": expert_batching.run,
+    "decode_throughput": decode_throughput.run,
 }
 
 
@@ -29,7 +33,14 @@ def main() -> None:
     t0 = time.time()
     for name in wanted:
         print(f"# --- {name} ---")
-        TABLES[name]()
+        n_rows, n_written = len(ROWS), len(WRITTEN)
+        payload = TABLES[name]()
+        if f"BENCH_{name}.json" in WRITTEN[n_written:]:
+            continue        # table wrote its own (richer) schema; keep it
+        doc = {"rows": rows_as_dicts(ROWS[n_rows:])}
+        if isinstance(payload, dict):
+            doc["derived"] = payload
+        write_json(name, doc)
     print(f"# {len(ROWS)} rows in {time.time()-t0:.0f}s")
 
 

@@ -24,8 +24,10 @@ def run(enable_coroutines: bool):
     rng = np.random.default_rng(1)
     engines = [NodeEngine(cfg, node_id=i, max_active=4, max_len=128,
                           page_size=16, seed=0) for i in range(2)]
+    # OFF baseline: threshold -> 0+ means refill only when the node is
+    # completely drained (static batch-at-a-time), no mid-flight COMBINE
     sc = SchedulerConfig(page_size=16,
-                         refill_threshold=0.75 if enable_coroutines else 0.0,
+                         refill_threshold=0.75 if enable_coroutines else 1e-9,
                          longtail_active=2 if enable_coroutines else 0,
                          migrate_imbalance=2 if enable_coroutines else 10**9)
     sched = CoroutineScheduler(engines, sc)
@@ -45,7 +47,8 @@ def main():
           f"{rep['total']} decode_steps={sum(e.decode_steps for e in engines)}")
     for i, e in enumerate(engines):
         print(f"  node{i}: primitives={e.stats.counts} "
-              f"host_store={e.host_store.nbytes()/2**20:.1f}MiB")
+              f"host_store={e.host_store.nbytes()/2**20:.1f}MiB "
+              f"d2h_transfers={e.d2h_transfers} (fused: ~2/page)")
     print(f"  events: {rep['log_tail']}")
     rep2, wall2, engines2 = run(enable_coroutines=False)
     print(f"[coroutine OFF] BCT={wall2:6.2f}s completed={rep2['completed']}/"

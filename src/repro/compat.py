@@ -1,0 +1,61 @@
+"""JAX version-compatibility shims.
+
+The codebase is written against the explicit-mesh API (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``, ``jax.shard_map``); older jaxlib
+builds (e.g. the 0.4.x line this container ships) expose the same
+functionality under different names.  Everything version-dependent goes
+through this module so the rest of the tree stays on the modern spelling.
+"""
+from __future__ import annotations
+
+import contextlib
+from functools import partial
+
+import jax
+
+
+class _EmptyMesh:
+    """Stand-in for an absent mesh context (matches AbstractMesh surface)."""
+    empty = True
+    axis_names = ()
+
+
+def get_abstract_mesh():
+    """Current mesh context: AbstractMesh on new JAX, the thread-local
+    physical mesh (entered via ``with mesh:`` / ``use_mesh``) on 0.4.x."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as _mesh_lib
+    m = _mesh_lib.thread_resources.env.physical_mesh
+    return m if m is not None else _EmptyMesh()
+
+
+def use_mesh(mesh):
+    """Context manager activating `mesh` for closed-over jitted code."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh            # 0.4.x: Mesh is itself a context manager
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (0.4.x)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map`` with the pre-0.5 ``check_rep`` spelling bridged."""
+    if f is None:
+        return partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=check_vma)
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

@@ -13,6 +13,7 @@ and is what benchmarks/expert_batching.py measures (Fig. 2b reproduction).
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional
 
@@ -21,6 +22,29 @@ import jax.numpy as jnp
 
 from repro.models import layers, moe as moe_lib, transformer as T
 from repro.models.api import MeshAxes, ModelConfig
+
+
+_PAGE_JIT_CAP = 8       # LRU cap on (steps, n_sub) page executables
+
+
+def _lru_get(cache: "OrderedDict", key, cap: int, make):
+    """Fetch-or-build `key` in an OrderedDict LRU bounded to `cap`."""
+    fn = cache.get(key)
+    if fn is None:
+        fn = cache[key] = make()
+    else:
+        cache.move_to_end(key)
+    while len(cache) > cap:
+        cache.popitem(last=False)
+    return fn
+
+
+def _sub_slices(B: int, n_sub: int) -> List[slice]:
+    """Static sub-batch boundaries covering ALL rows; when B % n_sub != 0
+    the later groups absorb the remainder (previously the tail rows were
+    silently dropped, which broke any non-divisible active batch)."""
+    bounds = [g * B // n_sub for g in range(n_sub + 1)]
+    return [slice(bounds[g], bounds[g + 1]) for g in range(n_sub)]
 
 
 @dataclasses.dataclass
@@ -54,6 +78,7 @@ class ModuleRuntime:
         self._attn = jax.jit(self._attn_impl, static_argnames=("nsub",))
         self._ffn = jax.jit(self._ffn_impl)
         self._head = jax.jit(self._head_impl)
+        self._page_cache: "OrderedDict[tuple, Any]" = OrderedDict()
 
     # --- jitted module bodies ------------------------------------------
     def _embed_impl(self, tokens):
@@ -90,15 +115,14 @@ class ModuleRuntime:
         cfg = self.cfg
         B = tokens.shape[0]
         n_sub = max(B // max(b_attn, 1), 1)
-        bsz = B // n_sub
         h = self._embed(tokens)
         new_k, new_v = [], []
         for l in range(cfg.num_layers):
             p = self.layer_params[l]
             kc_l, vc_l = cache["k"][l], cache["v"][l]
             h_parts, k_parts, v_parts = [], [], []
-            for g in range(n_sub):
-                sl = slice(g * bsz, (g + 1) * bsz)
+            for g, sl in enumerate(_sub_slices(B, n_sub)):
+                bsz = sl.stop - sl.start
                 hg, kg, vg = self._attn(p, h[sl], kc_l[sl], vc_l[sl],
                                         lengths[sl], n_sub)
                 self.traces.append(ModuleTrace("attention", l, bsz, bsz))
@@ -119,6 +143,71 @@ class ModuleRuntime:
         cache = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
         nxt = self._head(h)
         return nxt, cache
+
+    # --- fused decode page (one program per page) ----------------------
+    def forward_decode_page(self, tokens, cache, lengths, remaining,
+                            b_attn: int, steps: int):
+        """Fused Algorithm-1 decode megastep: one jitted ``lax.scan`` over
+        ``steps`` module-granularity decode steps.
+
+        Each scanned step is the same decomposition as ``forward_decode``
+        — B_attn sub-batched attention, COMBINE (concatenate) into the
+        full B_moe batch before each FFN/MoE — but the whole page compiles
+        into ONE device program: sampled tokens self-feed on device and
+        finished slots (``remaining`` exhausted) are masked.  The
+        intra-forward yield points become trace-time boundaries only;
+        the scheduler regains control at the page boundary, which is all
+        §5.3 requires.  Returns ``(token_block, tokens, lengths,
+        remaining, cache)`` with ``token_block`` of shape (steps, B);
+        the carry outputs stay on device so pages decompose into chained
+        pow2 chunks (see NodeEngine.decode_page)."""
+        B = int(tokens.shape[0])
+        n_sub = max(B // max(b_attn, 1), 1)
+        fn = _lru_get(self._page_cache, (int(steps), n_sub), _PAGE_JIT_CAP,
+                      lambda: jax.jit(partial(self._page_impl,
+                                              steps=int(steps),
+                                              n_sub=n_sub),
+                                      donate_argnums=(0,)))
+        return fn(cache, tokens, lengths, remaining)
+
+    def _page_impl(self, cache, tokens, lengths, remaining, *, steps: int,
+                   n_sub: int):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        slices = _sub_slices(B, n_sub)
+
+        def one_step(carry, _):
+            cache, tokens, lengths, remaining = carry
+            h = T._embed_tokens(cfg, self.params, tokens[:, None])
+
+            def layer_body(hh, xs):
+                p, c = xs
+                h_parts, k_parts, v_parts = [], [], []
+                for sl in slices:
+                    hg, kg, vg = self._attn_impl(p, hh[sl], c["k"][sl],
+                                                 c["v"][sl], lengths[sl],
+                                                 n_sub)
+                    h_parts.append(hg)
+                    k_parts.append(kg)
+                    v_parts.append(vg)
+                hh = jnp.concatenate(h_parts, axis=0)   # COMBINE
+                hh = self._ffn_impl(p, hh)
+                return hh, {"k": jnp.concatenate(k_parts, axis=0),
+                            "v": jnp.concatenate(v_parts, axis=0)}
+
+            h, new_cache = jax.lax.scan(layer_body, h,
+                                        (self.params["layers"], cache))
+            nxt = self._head_impl(h)
+            live = remaining > 0
+            tokens = jnp.where(live, nxt, tokens)
+            lengths = lengths + live.astype(jnp.int32)
+            remaining = remaining - live.astype(jnp.int32)
+            return (new_cache, tokens, lengths, remaining), tokens
+
+        (cache, tokens, lengths, remaining), block = jax.lax.scan(
+            one_step, (cache, tokens, lengths, remaining), None,
+            length=steps)
+        return block, tokens, lengths, remaining, cache
 
     def expert_load(self, b_moe: int) -> Dict[str, float]:
         """Per-expert batch statistics at the MoE gate for a combined batch

@@ -13,6 +13,14 @@ Loop structure per decode *page* (P tokens, §5.3):
   ii.  Eviction  — YIELD finished sequences, release pages
   iii. Extension — extend page allocation or YIELD (most-progress-first)
   iv.  Refill    — COMBINE waiting sequences into the active batch
+
+Page-block contract (fused decode): ``engine.decode_page`` executes the
+whole page as one fused device program capped at ``min(P, max remaining)``
+steps (the on-device done mask absorbs mid-page finishes — that cap IS the
+early page exit) and applies the returned ``(P, max_active)`` token block
+to the coroutines before returning.  The page-boundary phases below
+therefore see fully updated coroutine state and ``sync_appends`` moves the
+block's KV to the host store with one batched gather per page.
 Callbacks:
   ON_REFILL_NODE — trigger prefill when decode under-fills the node
   ON_LONG_TAIL   — PARTITION stragglers over idle devices
@@ -142,7 +150,10 @@ class CoroutineScheduler:
                     prim.combine(batch, eng)
 
     def _check_longtail(self, node: int, eng):
-        live = [c for c in self.cos.values() if not c.done]
+        # only THIS node's live sequences: a busy neighbour node must not
+        # suppress PARTITION for a node that is already down to stragglers
+        live = [c for c in self.cos.values()
+                if c.node == node and not c.done]
         active = [c for c in live if c.status == Status.ACTIVE]
         others = [c for c in live if c.status != Status.ACTIVE]
         if (len(active) <= self.cfg.longtail_active and not others

@@ -81,7 +81,11 @@ class HostKVStore:
     # -- incremental append (async KV propagation, §5.3 Sync phase) --------
     def append_tokens(self, seq_id: int, new_slices: Dict[str, np.ndarray],
                       start: int):
-        """Propagate freshly decoded KV entries (device -> host)."""
+        """Propagate freshly decoded KV entries (device -> host).
+
+        Writes are batched page-by-page (one slice assignment per touched
+        page) rather than token-by-token, so a whole decode-page block
+        lands in at most ``ceil(n_new/P) + 1`` copies per leaf."""
         st = self.seqs[seq_id]
         P = self.page_size
         n_new = next(iter(new_slices.values())).shape[1]
@@ -90,13 +94,15 @@ class HostKVStore:
                 st.whole[name] = np.array(arr)
                 continue
             pages = st.pages.setdefault(name, [])
-            for i in range(n_new):
-                pos = start + i
-                pidx, off = divmod(pos, P)
+            i = 0
+            while i < n_new:
+                pidx, off = divmod(start + i, P)
                 while len(pages) <= pidx:
                     pages.append(np.zeros((arr.shape[0], P) + arr.shape[2:],
                                           arr.dtype))
-                pages[pidx][:, off] = arr[:, i]
+                take = min(P - off, n_new - i)
+                pages[pidx][:, off: off + take] = arr[:, i: i + take]
+                i += take
         st.length = max(st.length, start + n_new)
 
     # -- restore (COMBINE) --------------------------------------------------

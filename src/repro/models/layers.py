@@ -23,6 +23,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.api import ModelConfig
 
 # ---------------------------------------------------------------------------
@@ -219,7 +220,7 @@ def cache_update(cache, new, lengths, axes=None):
     owning position ``lengths`` writes one token (O(1) traffic; §Perf D1).
     """
     if axes is not None and axes.model is not None:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
         if not mesh.empty and axes.model in mesh.axis_names:
             return _cache_update_dus(cache, new, lengths, axes, mesh)
     oh = jax.nn.one_hot(lengths, cache.shape[1], dtype=cache.dtype)  # (B, S)
@@ -237,7 +238,7 @@ def _cache_update_dus(cache, new, lengths, axes, mesh):
     bspec = P(Bax, None, None, None)
     lspec = P(Bax)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(compat.shard_map, mesh=mesh,
              in_specs=(cspec, bspec, lspec), out_specs=cspec,
              check_vma=False)
     def upd(c_l, n_l, len_l):

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.api import MeshAxes, ModelConfig
 from repro.models import layers, moe as moe_lib, rglru, ssm as ssm_lib
 
@@ -264,7 +265,7 @@ def _stack_fwd(cfg, axes, stack, h, positions, hint, want_cache, remat,
 
 def _pin(axes: MeshAxes, h):
     """Keep the residual stream sharded (batch over DP axes, replicated TP)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh.empty:
         return h
     return jax.lax.with_sharding_constraint(h, P(axes.batch, None, None))
@@ -478,6 +479,39 @@ def decode_step(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
     logits = logits_fn(cfg, params, h)                           # (B,1,V)
     next_tokens = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
     return next_tokens, new_cache
+
+
+def decode_page(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
+                lengths, remaining, steps: int, unroll=False):
+    """Fused decode megastep: `steps` greedy decode steps in ONE program.
+
+    A ``lax.scan`` over ``decode_step`` that keeps tokens/lengths/KV on
+    device, self-feeds the sampled token, and masks all per-slot updates
+    once ``remaining`` hits zero (mid-page finishes).  Slots whose
+    ``remaining`` starts at zero (empty or already-finished) never advance:
+    their KV writes land at position ``lengths`` — one past their valid
+    region — and are overwritten/ignored, exactly as in the per-step loop.
+
+    tokens/lengths/remaining: (B,) int32.  Returns
+    ``(token_block, tokens, lengths, remaining, cache)`` where
+    ``token_block`` is (steps, B) — row t is the slot's token after step t
+    (rows past a slot's remaining repeat its last token and must be
+    discarded by the caller).  One host transfer of ``token_block``
+    replaces ``steps`` per-token round-trips.
+    """
+    def body(carry, _):
+        cache, tokens, lengths, remaining = carry
+        nxt, cache = decode_step(cfg, axes, params, cache, tokens, lengths,
+                                 unroll=unroll)
+        live = remaining > 0
+        tokens = jnp.where(live, nxt, tokens)
+        lengths = lengths + live.astype(jnp.int32)
+        remaining = remaining - live.astype(jnp.int32)
+        return (cache, tokens, lengths, remaining), tokens
+
+    (cache, tokens, lengths, remaining), block = jax.lax.scan(
+        body, (cache, tokens, lengths, remaining), None, length=steps)
+    return block, tokens, lengths, remaining, cache
 
 
 def _layer_decode(cfg, axes, p, c, h, lengths):

@@ -7,14 +7,33 @@ prefill/decode steps.  The CoroutineScheduler drives it exclusively through
 the slot protocol, so the exact same scheduling code also drives the
 cluster simulator.
 
+Fused decode megastep (default)
+-------------------------------
+``decode_page`` runs one jitted ``lax.scan`` over the whole page: tokens,
+lengths, the per-slot ``remaining`` countdown and the KV cache stay on
+device (cache donated across the scan), sampled tokens self-feed, and
+finished slots are masked out.  The page returns as ONE ``(P, max_active)``
+token block — exactly one device→host transfer per page (counted in
+``d2h_transfers``; the per-token loop pays one per token plus Python
+bookkeeping, the dispatch-bound regime benchmarks/decode_throughput.py
+measures).  Ragged pages decompose into chained pow2-sized scan chunks
+(40 -> 32+8) so the engine holds at most ``log2(P)`` megastep
+executables while never running a wasted masked step.
+
+Host-sync contract: after ``decode_page``, coroutine state (generated/
+last_token/length) is already updated from the block; ``sync_appends``
+then gathers every dirty slot's new KV window in one batched device
+gather → one host transfer → per-page host-store appends.
+
 Supports dense and MoE families (caches {"k","v"}); set
 ``module_granularity=True`` to decode through the Algorithm-1 module
-runtime (per-sub-batch attention + COMBINE before MoE) instead of the
-monolithic decode_step.
+runtime (per-sub-batch attention + COMBINE before MoE), which fuses the
+same way via ``ModuleRuntime.forward_decode_page``.
 """
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -22,12 +41,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.coroutine import Phase, SequenceCoroutine, Status
-from repro.core.forward import ModuleRuntime
+from repro.core.forward import ModuleRuntime, _lru_get
 from repro.core.primitives import PrimitiveStats
 from repro.memory.allocator import PageAllocator
 from repro.memory.paged_kv import HostKVStore
 from repro.models import transformer as T
 from repro.models.api import MeshAxes, ModelConfig
+
+_PREFILL_JIT_CAP = 8    # LRU cap on (B, S)-bucketed prefill executables
+_MEGASTEP_JIT_CAP = 8   # LRU cap on scan-length-bucketed megasteps
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
 
 
 class NodeEngine:
@@ -36,7 +62,7 @@ class NodeEngine:
                  page_size: int = 32, num_devices: int = 8,
                  device_pages: Optional[int] = None,
                  module_granularity: bool = False, b_attn: int = 0,
-                 seed: int = 0):
+                 fused: bool = True, seed: int = 0):
         assert cfg.family in ("dense", "moe") and cfg.sliding_window == 0, \
             "mini-engine supports dense/moe caches; see cluster sim for rest"
         self.cfg = cfg
@@ -46,6 +72,7 @@ class NodeEngine:
         self.max_len = max_len
         self.num_devices = num_devices
         self.page_size = page_size
+        self.fused = fused
 
         self.params = T.init_params(cfg, jax.random.PRNGKey(seed))
         self.host_store = HostKVStore(page_size)
@@ -63,12 +90,14 @@ class NodeEngine:
         self._decode = jax.jit(
             lambda p, c, t, l: T.decode_step(cfg, self.axes, p, c, t, l),
             donate_argnums=(1,))
-        self._prefill_cache: Dict[int, object] = {}
+        self._megastep_cache: "OrderedDict[int, object]" = OrderedDict()
+        self._prefill_cache: "OrderedDict[tuple, object]" = OrderedDict()
         self.module_rt = (ModuleRuntime(cfg, self.axes, self.params)
                           if module_granularity else None)
         self.b_attn = b_attn or max_active
         self.decode_steps = 0
         self.prefill_tokens = 0
+        self.d2h_transfers = 0      # device→host copies through _to_host
 
     # ------------------------------------------------------------- protocol
     def clock(self) -> float:
@@ -117,9 +146,80 @@ class NodeEngine:
         # simulator models the speedup (runtime/cluster.py).
         pass
 
+    # ------------------------------------------------------------- transfers
+    def _to_host(self, arr) -> np.ndarray:
+        """Single funnel for device→host copies (spy point for tests)."""
+        self.d2h_transfers += 1
+        return np.asarray(arr)
+
     # ------------------------------------------------------------- compute
     def decode_page(self, active: Sequence[SequenceCoroutine], P: int):
-        """Decode up to P tokens for every active sequence."""
+        """Decode up to P tokens for every active sequence.
+
+        Fused path (default): jitted scan(s) totalling exactly
+        ``min(P, max remaining)`` steps — the done mask inside the scan
+        handles mid-page finishes, and capping the page at the max
+        remaining IS the early page exit (no token is ever decoded past a
+        slot's budget).  The per-page ``decode_steps`` counter advances by
+        the logical step count, same as the per-token loop, so
+        simulator/roofline accounting is unchanged."""
+        if not active:
+            return
+        steps = min(P, max(c.remaining for c in active))
+        if steps <= 0:
+            return
+        if not self.fused:
+            return self._decode_page_looped(active, P)
+        # exact step count via pow2 decomposition (40 -> 32+8): each chunk
+        # is a cached scan executable (≤ log2(P) distinct sizes), chunks
+        # chain on device, blocks concatenate on device -> no masked tail
+        # compute and still ONE host transfer for the whole page
+        rem = np.zeros((self.max_active,), np.int32)
+        for co in active:
+            rem[co.slot] = co.remaining
+        rem_j = jnp.asarray(rem)
+        blocks = []
+        left = steps
+        while left > 0:
+            chunk = 1 << (left.bit_length() - 1)    # largest pow2 <= left
+            if self.module_rt is not None:
+                blk, self.tokens, self.lengths, rem_j, self.cache = \
+                    self.module_rt.forward_decode_page(
+                        self.tokens, self.cache, self.lengths, rem_j,
+                        self.b_attn, chunk)
+            else:
+                mega = self._get_megastep(chunk)
+                blk, self.tokens, self.lengths, rem_j, self.cache = mega(
+                    self.params, self.cache, self.tokens, self.lengths,
+                    rem_j)
+            blocks.append(blk)
+            left -= chunk
+        self.decode_steps += steps
+        block = blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks)
+        block_np = self._to_host(block)     # the ONE d2h transfer per page
+        for co in active:
+            n = min(steps, co.remaining)
+            if n <= 0:
+                continue
+            toks = block_np[:n, co.slot].tolist()
+            co.generated.extend(toks)
+            co.last_token = toks[-1]
+            co.length += n
+
+    def _get_megastep(self, steps: int):
+        def make():
+            def _mega(params, cache, tokens, lengths, remaining):
+                return T.decode_page(self.cfg, self.axes, params, cache,
+                                     tokens, lengths, remaining, steps)
+            return jax.jit(_mega, donate_argnums=(1,))
+        return _lru_get(self._megastep_cache, steps, _MEGASTEP_JIT_CAP,
+                        make)
+
+    def _decode_page_looped(self, active: Sequence[SequenceCoroutine],
+                            P: int):
+        """Seed per-token loop: one jitted step, one host round-trip and
+        Python bookkeeping per token.  Kept as the measured baseline for
+        benchmarks/decode_throughput.py (fused=False)."""
         by_slot = {c.slot: c for c in active}
         steps = min(P, max(c.remaining for c in active))
         for _ in range(steps):
@@ -130,7 +230,7 @@ class NodeEngine:
                 nxt, self.cache = self._decode(self.params, self.cache,
                                                self.tokens, self.lengths)
             self.decode_steps += 1
-            nxt_np = np.asarray(nxt)
+            nxt_np = self._to_host(nxt)
             upd_tok, upd_len = [], []
             for s, co in by_slot.items():
                 if co.remaining > 0:
@@ -150,36 +250,74 @@ class NodeEngine:
                 break
 
     def sync_appends(self, active: Sequence[SequenceCoroutine]):
-        """Propagate freshly decoded KV entries to the host store (§5.3 i)."""
+        """Propagate freshly decoded KV entries to the host store (§5.3 i).
+
+        One batched per-page gather: every dirty slot's new token window
+        (its OWN [synced, length) span, so one freshly combined slot can't
+        inflate the copy for the others) is gathered from the device cache
+        in a single op, flattened into one (L, n_dirty, W, F_total) blob
+        with W = the largest per-slot span (≤ one page in steady state),
+        moved with ONE host transfer, then appended page-by-page into the
+        host store on the CPU side."""
+        todo = []
         for co in active:
-            start = self.synced_len.get(co.seq_id, 0)
-            if co.length <= start or co.slot is None:
+            if co.slot is None:
                 continue
-            slices = {name: np.asarray(leaf[:, co.slot, start:co.length])
-                      for name, leaf in self.cache.items()}
+            start = self.synced_len.get(co.seq_id, 0)
+            if not self.host_store.has(co.seq_id):
+                start = 0               # first sync: checkpoint from zero
+            if co.length > start:
+                todo.append((co, start))
+        if not todo:
+            return
+        starts = np.array([start for _, start in todo])
+        W = int(max(co.length - start for co, start in todo))
+        slots = jnp.asarray([[co.slot] for co, _ in todo], jnp.int32)
+        pos = jnp.asarray(np.minimum(starts[:, None] + np.arange(W)[None],
+                                     self.max_len - 1), jnp.int32)
+        metas, parts = [], []
+        for name, leaf in self.cache.items():
+            seg = leaf[:, slots, pos]               # (L, n, W, *trail)
+            trail = seg.shape[3:]
+            metas.append((name, trail, int(np.prod(trail)) if trail else 1))
+            parts.append(seg.reshape(seg.shape[0], len(todo), W, -1))
+        blob = self._to_host(jnp.concatenate(parts, axis=-1))
+        offs, off = {}, 0
+        for name, trail, f in metas:
+            offs[name] = (off, off + f)
+            off += f
+        L = blob.shape[0]
+        for i, (co, start) in enumerate(todo):
+            n = co.length - start
+            slices = {}
+            for name, trail, _ in metas:
+                lo, hi = offs[name]
+                win = blob[:, i, :n, lo:hi]
+                slices[name] = win.reshape((L, n) + trail)
             if self.host_store.has(co.seq_id):
                 self.host_store.append_tokens(co.seq_id, slices, start)
             else:
-                full = {name: np.asarray(leaf[:, co.slot, :co.length])
-                        for name, leaf in self.cache.items()}
-                self.host_store.checkpoint(co.seq_id, full, co.length)
+                self.host_store.checkpoint(co.seq_id, slices, co.length)
             self.synced_len[co.seq_id] = co.length
 
     def prefill(self, cos: Sequence[SequenceCoroutine]):
         """Prefill a batch of INIT coroutines; leaves them INACTIVE with KV
-        checkpointed to the host store (paper Fig. 7 prefill flow)."""
+        checkpointed to the host store (paper Fig. 7 prefill flow).
+
+        Executables are bucketed to (pow2 batch, pow2 sequence) and held in
+        a small LRU so long mixed workloads can't accumulate one jit per
+        exact (B, S)."""
         if not cos:
             return
         maxlen = max(c.prompt_len for c in cos)
-        S = max(1 << (maxlen - 1).bit_length(), 8)  # pow2 bucket
-        B = len(cos)
-        toks = np.zeros((B, S), np.int32)           # left-align, pad after
+        S = max(_pow2(maxlen), 8)           # pow2 sequence bucket
+        B = max(_pow2(len(cos)), 1)         # pow2 batch bucket (padded rows)
+        toks = np.zeros((B, S), np.int32)   # left-align, pad after
         last_idx = np.zeros((B,), np.int32)
         for i, c in enumerate(cos):
             toks[i, : c.prompt_len] = c.prompt[:]
             last_idx[i] = c.prompt_len - 1
-        key = (B, S)
-        if key not in self._prefill_cache:
+        def make():
             def _prefill_impl(params, tokens, last):
                 h, _, caches = T._backbone(self.cfg, self.axes, params,
                                            {"tokens": tokens}, None, True,
@@ -188,10 +326,11 @@ class NodeEngine:
                     jnp.int32).repeat(h.shape[-1], -1), axis=1)
                 logits = T.logits_fn(self.cfg, params, hl)
                 return logits, caches
-            self._prefill_cache[key] = jax.jit(_prefill_impl)
-        logits, cache = self._prefill_cache[key](
-            self.params, jnp.asarray(toks), jnp.asarray(last_idx))
-        logits_np = np.asarray(logits)
+            return jax.jit(_prefill_impl)
+        fn = _lru_get(self._prefill_cache, (B, S), _PREFILL_JIT_CAP, make)
+        logits, cache = fn(self.params, jnp.asarray(toks),
+                           jnp.asarray(last_idx))
+        logits_np = self._to_host(logits)
         for i, co in enumerate(cos):
             slices = {name: np.asarray(leaf[:, i, : co.prompt_len])
                       for name, leaf in cache.items()}

@@ -1,0 +1,203 @@
+"""Fused decode megastep: parity with the seed per-token loop, the
+one-transfer-per-page contract, and bounded jit caches.
+
+The fused path (one jitted lax.scan per page, NodeEngine(fused=True),
+the default) must be token-for-token identical to the per-step Python
+loop it replaced — across dense and MoE configs, mid-page finishes,
+eviction/yield/combine round-trips, and the module-granularity path."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.forward import ModuleRuntime
+from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
+from repro.models import transformer as T
+from repro.models.api import MeshAxes
+from repro.runtime.engine import NodeEngine, _PREFILL_JIT_CAP
+
+AXES = MeshAxes()
+
+
+def _run(cfg, prompts, max_out, *, fused, page_size=8, max_active=3,
+         seed=0, **kw):
+    eng = NodeEngine(cfg, max_active=max_active, max_len=128,
+                     page_size=page_size, seed=seed, fused=fused, **kw)
+    sched = CoroutineScheduler([eng], SchedulerConfig(page_size=page_size))
+    ids = sched.submit(prompts, max_out)
+    rep = sched.run(max_ticks=500)
+    assert rep["completed"] == len(prompts)
+    return [sched.cos[i].generated for i in ids], eng
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "phi3_5_moe"])
+def test_fused_matches_looped_end_to_end(arch, rng):
+    """Dense + MoE: full scheduler runs (prefill, eviction pressure with
+    more sequences than slots, yield/combine round-trips, mid-page
+    finishes from ragged max_out) decode identical tokens."""
+    cfg = reduced_config(arch)
+    prompts = [list(rng.integers(2, cfg.vocab_size, int(n)))
+               for n in rng.integers(4, 12, 7)]
+    max_out = [12, 5, 9, 20, 7, 3, 16]      # finishes at every page offset
+    got_f, eng_f = _run(cfg, prompts, max_out, fused=True)
+    got_l, eng_l = _run(cfg, prompts, max_out, fused=False)
+    assert got_f == got_l, "fused megastep diverged from per-step loop"
+    # per-page decode_steps accounting preserved (simulator/roofline)
+    assert eng_f.decode_steps == eng_l.decode_steps
+    # fused needs strictly fewer device->host transfers
+    assert eng_f.d2h_transfers < eng_l.d2h_transfers
+
+
+def test_fused_module_granularity_matches_looped(rng):
+    """Algorithm-1 module path: scanned forward_decode_page == the
+    per-step forward_decode loop, token for token."""
+    cfg = reduced_config("phi3_5_moe")
+    prompts = [list(rng.integers(2, cfg.vocab_size, int(n)))
+               for n in rng.integers(4, 12, 5)]
+    max_out = [9, 4, 14, 6, 11]
+    got_f, _ = _run(cfg, prompts, max_out, fused=True, max_active=4,
+                    module_granularity=True, b_attn=2)
+    got_l, _ = _run(cfg, prompts, max_out, fused=False, max_active=4,
+                    module_granularity=True, b_attn=2)
+    assert got_f == got_l
+
+
+def test_one_transfer_per_decode_page(rng):
+    """Transfer-spy: exactly ONE device->host copy per decode_page call."""
+    cfg = reduced_config("llama3_2_1b")
+    eng = NodeEngine(cfg, max_active=3, max_len=128, page_size=8, seed=0)
+    sched = CoroutineScheduler([eng], SchedulerConfig(page_size=8))
+    sched.submit([[2, 3, 4, 5]] * 3, [20] * 3)
+
+    calls = []
+    in_page = [False]
+    orig_decode, orig_to_host = eng.decode_page, eng._to_host
+
+    def spy_to_host(arr):
+        if in_page[0]:              # ignore prefill/sync transfers
+            calls[-1] += 1
+        return orig_to_host(arr)
+
+    def spy_decode(active, P):
+        calls.append(0)
+        in_page[0] = True
+        try:
+            return orig_decode(active, P)
+        finally:
+            in_page[0] = False
+
+    eng.decode_page, eng._to_host = spy_decode, spy_to_host
+    rep = sched.run(max_ticks=300)
+    assert rep["completed"] == 3
+    assert calls and all(c == 1 for c in calls), calls
+
+
+def test_megastep_direct_mid_page_mask():
+    """T.decode_page with ragged `remaining`: a slot finishing mid-page
+    stops advancing (lengths frozen, token frozen) while others continue;
+    emitted rows match a hand-rolled decode_step loop."""
+    cfg = reduced_config("qwen2_0_5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    B, steps = 3, 6
+    cache = T.init_cache(cfg, B, 64)
+    tokens = jnp.asarray([5, 9, 13], jnp.int32)
+    lengths = jnp.asarray([3, 1, 0], jnp.int32)
+    remaining = jnp.asarray([2, 6, 4], jnp.int32)
+
+    block, tok_f, len_f, rem_f, _ = jax.jit(
+        lambda c, t, l, r: T.decode_page(cfg, AXES, params, c, t, l, r,
+                                         steps))(cache, tokens, lengths,
+                                                 remaining)
+    # reference: per-step loop with host-side masking
+    c, t, l = T.init_cache(cfg, B, 64), tokens, lengths
+    rem = np.asarray(remaining).copy()
+    rows = []
+    for _ in range(steps):
+        nxt, c = T.decode_step(cfg, AXES, params, c, t, l)
+        live = rem > 0
+        t = jnp.where(jnp.asarray(live), nxt, t)
+        l = l + jnp.asarray(live.astype(np.int32))
+        rem -= live.astype(np.int32)
+        rows.append(np.asarray(t))
+    np.testing.assert_array_equal(np.asarray(block), np.stack(rows))
+    np.testing.assert_array_equal(np.asarray(len_f),
+                                  np.asarray(lengths) + [2, 6, 4])
+    np.testing.assert_array_equal(np.asarray(rem_f), [0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(tok_f), np.asarray(t))
+
+
+def test_module_subbatch_covers_ragged_batch(rng):
+    """B % n_sub != 0 (B=5, b_attn=2): the sub-batch split used to drop
+    the tail rows (looped: head IndexError; fused: scan carry shape
+    mismatch).  Both paths must now cover every row; caches match the
+    monolithic step up to the documented bf16 sub-batch rounding (exact
+    token equality with monolithic is NOT guaranteed — sub-batched
+    einsums can flip an argmax by 1-2 ulp)."""
+    cfg = reduced_config("phi3_5_moe")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rt = ModuleRuntime(cfg, AXES, params)
+    B = 5
+    from repro.core.forward import _sub_slices
+    for b, n in [(5, 2), (7, 3), (8, 4), (3, 1)]:
+        sls = _sub_slices(b, n)
+        assert sls[0].start == 0 and sls[-1].stop == b
+        assert all(a.stop == c.start for a, c in zip(sls, sls[1:]))
+    cache = T.init_cache(cfg, B, 64)
+    toks = jnp.asarray(rng.integers(2, cfg.vocab_size, B), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, 16, B), jnp.int32)
+    n_loop, c_loop = rt.forward_decode(toks, cache, lens, b_attn=2)
+    _, c_mono = T.decode_step(cfg, AXES, params, cache, toks, lens)
+    assert n_loop.shape == (B,)
+    assert int(jnp.max(n_loop)) < T.padded_vocab(cfg)
+    for name in c_loop:
+        np.testing.assert_allclose(np.asarray(c_loop[name], np.float32),
+                                   np.asarray(c_mono[name], np.float32),
+                                   atol=6e-2)
+    rem = jnp.full((B,), 4, jnp.int32)
+    block, tok_p, len_p, rem_p, _ = rt.forward_decode_page(
+        toks, cache, lens, rem, 2, 3)
+    assert block.shape == (3, B)
+    np.testing.assert_array_equal(np.asarray(len_p), np.asarray(lens) + 3)
+    np.testing.assert_array_equal(np.asarray(block[2]), np.asarray(tok_p))
+
+
+def test_prefill_jit_cache_bucketed_and_bounded(rng):
+    """Prefill compilations bucket (B, S) to pow2 and evict beyond the
+    LRU cap on long mixed workloads."""
+    cfg = reduced_config("llama3_2_1b")
+    eng = NodeEngine(cfg, max_active=8, max_len=512, page_size=8)
+    sched = CoroutineScheduler([eng], SchedulerConfig(page_size=8))
+
+    def prefill_batch(n_cos, plen):
+        ids = sched.submit([[2] * plen] * n_cos, [1] * n_cos)
+        eng.prefill([sched.cos[i] for i in ids])
+
+    prefill_batch(3, 5)      # -> key (4, 8)
+    prefill_batch(4, 7)      # same bucket, no new compile
+    assert list(eng._prefill_cache) == [(4, 8)]
+    for i, plen in enumerate([9, 17, 33, 65, 129, 250, 255, 31, 63]):
+        prefill_batch(1 + i % 3, plen)
+    assert len(eng._prefill_cache) <= _PREFILL_JIT_CAP
+    assert all(b == 1 << (b - 1).bit_length() and s == 1 << (s - 1).bit_length()
+               for b, s in eng._prefill_cache)
+
+
+def test_host_store_consistent_after_fused_pages(rng):
+    """The batched per-page sync must leave the host store byte-identical
+    to what per-sequence slicing produced (restore == device cache)."""
+    cfg = reduced_config("llama3_2_1b")
+    eng = NodeEngine(cfg, max_active=2, max_len=64, page_size=8, seed=0)
+    sched = CoroutineScheduler([eng], SchedulerConfig(page_size=8))
+    ids = sched.submit([[2, 3, 4], [5, 6, 7, 8]], [10, 13])
+    cos = [sched.cos[i] for i in ids]
+    for _ in range(2):
+        sched._node_tick(0, eng)
+    for co in cos:
+        if co.slot is None or co.done:
+            continue
+        restored = eng.host_store.restore(co.seq_id, eng.max_len)
+        for name, leaf in eng.cache.items():
+            dev = np.asarray(leaf[:, co.slot, : co.length])
+            np.testing.assert_array_equal(
+                restored[name][:, : co.length].astype(dev.dtype), dev)

@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) on the memory subsystem invariants:
 paged host store roundtrips, allocator conservation, eviction policy."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; skip when absent")
 from hypothesis import given, settings, strategies as st
 
 from repro.memory.allocator import PageAllocator

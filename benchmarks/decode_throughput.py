@@ -26,17 +26,18 @@ from benchmarks.common import emit, write_json
 from repro.configs import reduced_config
 from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
 from repro.runtime.engine import NodeEngine
+from repro.sampling import SamplingParams
 
 
 def _throughput(cfg, *, fused: bool, max_active: int, page: int,
-                max_out: int, repeats: int = 3) -> dict:
+                max_out: int, repeats: int = 3, sampling=None) -> dict:
     eng = NodeEngine(cfg, max_active=max_active, max_len=max_out + 32,
                      page_size=page, seed=0, fused=fused)
     prompts = [[2, 3, 4, 5, 6, 7, 8, 9]] * max_active
 
     def once():
         sched = CoroutineScheduler([eng], SchedulerConfig(page_size=page))
-        sched.submit(prompts, [max_out] * max_active)
+        sched.submit(prompts, [max_out] * max_active, sampling=sampling)
         t0 = time.perf_counter()
         rep = sched.run(max_ticks=100000)
         dt = time.perf_counter() - t0
@@ -81,15 +82,62 @@ def run(tiny: bool = False) -> dict:
     return payload
 
 
+def run_sampled(tiny: bool = False) -> dict:
+    """Sampled-decode variant: temperature/top-k/top-p active (full logit
+    pipeline + Gumbel-max in the megastep carry).  Measures the fused
+    one-transfer-per-page path against the per-token looped baseline AND
+    reports the sampling overhead vs greedy fused decode.  Results go to
+    ``BENCH_sampled_decode.json``."""
+    cfg = dataclasses.replace(reduced_config("llama3_2_1b"),
+                              dtype="float32", num_layers=1, d_model=64,
+                              d_ff=128, head_dim=16, vocab_size=256)
+    max_active, page, max_out = (2, 8, 12) if tiny else (8, 64, 96)
+    sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=0)
+    looped = _throughput(cfg, fused=False, max_active=max_active,
+                         page=page, max_out=max_out, sampling=sp)
+    fused = _throughput(cfg, fused=True, max_active=max_active,
+                        page=page, max_out=max_out, sampling=sp)
+    greedy = _throughput(cfg, fused=True, max_active=max_active,
+                         page=page, max_out=max_out)
+    speedup = fused["tokens_per_s"] / looped["tokens_per_s"]
+    overhead = greedy["tokens_per_s"] / fused["tokens_per_s"]
+    emit("decode.sampled.looped.tok_s", 1e6 / looped["tokens_per_s"],
+         f"{looped['tokens_per_s']:.0f} tok/s, "
+         f"{looped['d2h_transfers']} d2h")
+    emit("decode.sampled.fused.tok_s", 1e6 / fused["tokens_per_s"],
+         f"{fused['tokens_per_s']:.0f} tok/s, "
+         f"{fused['d2h_transfers']} d2h")
+    emit("decode.sampled.speedup", 0.0, f"{speedup:.2f}x")
+    emit("decode.sampled.vs_greedy", 0.0, f"{overhead:.2f}x slower")
+    payload = {
+        "config": {"arch": "llama3_2_1b(reduced)", "max_active": max_active,
+                   "page_size": page, "max_out": max_out, "tiny": tiny,
+                   "sampling": {"temperature": 0.8, "top_k": 40,
+                                "top_p": 0.95}},
+        "looped": looped, "fused": fused, "greedy_fused": greedy,
+        "speedup": speedup, "sampling_overhead_vs_greedy": overhead,
+    }
+    write_json("sampled_decode", payload)
+    return payload
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true",
                     help="smoke-sized run for CI")
+    ap.add_argument("--sampled", action="store_true",
+                    help="run the sampled-decode variant too")
     args = ap.parse_args()
     p = run(tiny=args.tiny)
     print(f"fused {p['fused']['tokens_per_s']:.0f} tok/s vs looped "
           f"{p['looped']['tokens_per_s']:.0f} tok/s -> "
           f"{p['speedup']:.2f}x")
+    if args.sampled:
+        s = run_sampled(tiny=args.tiny)
+        print(f"sampled: fused {s['fused']['tokens_per_s']:.0f} tok/s vs "
+              f"looped {s['looped']['tokens_per_s']:.0f} tok/s -> "
+              f"{s['speedup']:.2f}x "
+              f"({s['sampling_overhead_vs_greedy']:.2f}x vs greedy)")
 
 
 if __name__ == "__main__":

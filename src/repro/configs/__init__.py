@@ -24,10 +24,37 @@ ARCH_IDS = [
 ASSIGNED = ARCH_IDS[:10]
 
 
+# Published generation defaults per architecture (generation_config.json
+# style): used by default_sampling() when a caller doesn't pin its own
+# SamplingParams.  Architectures absent here default to greedy.
+SAMPLING_DEFAULTS = {
+    "llama3_2_1b": dict(temperature=0.6, top_p=0.9),
+    "qwen2_0_5b": dict(temperature=0.7, top_p=0.8, top_k=20,
+                       repetition_penalty=1.1),
+    "smollm_360m": dict(temperature=0.6, top_p=0.92),
+    "h2o_danube_1_8b": dict(temperature=0.7, top_p=0.95),
+    "phi3_5_moe": dict(temperature=0.7, top_p=0.95),
+    "qwen3_moe_30b": dict(temperature=0.6, top_p=0.95, top_k=20),
+    "deepseek_r1": dict(temperature=0.6, top_p=0.95),
+    "recurrentgemma_2b": dict(temperature=1.0, top_k=64, top_p=0.95),
+}
+
+
 def get_config(name: str):
     name = name.replace("-", "_").replace(".", "_")
     mod = importlib.import_module(f"repro.configs.{name}")
     return mod.CONFIG
+
+
+def default_sampling(name: str, **overrides):
+    """Recommended SamplingParams for an architecture (greedy when the
+    model card publishes none).  ``overrides`` patch individual fields,
+    e.g. ``default_sampling("llama3_2_1b", seed=7)``."""
+    from repro.sampling.params import SamplingParams
+    name = name.replace("-", "_").replace(".", "_")
+    kw = dict(SAMPLING_DEFAULTS.get(name, {}))
+    kw.update(overrides)
+    return SamplingParams(**kw)
 
 
 def reduced_config(name: str):

@@ -13,6 +13,8 @@ import enum
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.sampling.params import SamplingParams
+
 
 class Phase(str, enum.Enum):
     PREFILL = "prefill"
@@ -39,6 +41,16 @@ class SequenceCoroutine:
     generated: List[int] = dataclasses.field(default_factory=list)
     last_token: int = 0
     length: int = 0                 # tokens represented in the KV state
+
+    # sampling: params travel WITH the coroutine so COMBINE/MIGRATE/
+    # PARTITION preserve per-sequence decoding behavior; device-side
+    # sampling state (PRNG key index, penalty counts) is re-derived from
+    # (sampling.seed, generated, prompt) at slot install, so no extra
+    # state crosses nodes.  `stopped` records a stop-token hit (the stop
+    # token IS emitted, then the sequence halts).
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
+    stopped: bool = False
 
     # placement (scheduler book-keeping; the paper's `migrate` target)
     node: int = 0
@@ -70,7 +82,13 @@ class SequenceCoroutine:
 
     @property
     def remaining(self) -> int:
+        if self.stopped:
+            return 0
         return max(self.max_out - len(self.generated), 0)
+
+    @property
+    def finish_reason(self) -> str:
+        return "stop" if self.stopped else "length"
 
     def tokens(self) -> List[int]:
         return self.prompt + self.generated

@@ -100,9 +100,14 @@ class ModuleRuntime:
         return h + y
 
     def _head_impl(self, h):
+        return jnp.argmax(self._head_logits_impl(h), axis=-1).astype(
+            jnp.int32)
+
+    def _head_logits_impl(self, h):
+        """Final norm + lm head -> next-token logits (B, V)."""
         h = layers.apply_norm(self.cfg, self.params["final_norm"], h)
         logits = T.logits_fn(self.cfg, self.params, h)
-        return jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        return logits[:, 0, :]
 
     # --- Algorithm 1 ------------------------------------------------------
     def forward_decode(self, tokens, cache, lengths, b_attn: int,
@@ -146,7 +151,7 @@ class ModuleRuntime:
 
     # --- fused decode page (one program per page) ----------------------
     def forward_decode_page(self, tokens, cache, lengths, remaining,
-                            b_attn: int, steps: int):
+                            b_attn: int, steps: int, sampling=None):
         """Fused Algorithm-1 decode megastep: one jitted ``lax.scan`` over
         ``steps`` module-granularity decode steps.
 
@@ -160,24 +165,35 @@ class ModuleRuntime:
         §5.3 requires.  Returns ``(token_block, tokens, lengths,
         remaining, cache)`` with ``token_block`` of shape (steps, B);
         the carry outputs stay on device so pages decompose into chained
-        pow2 chunks (see NodeEngine.decode_page)."""
+        pow2 chunks (see NodeEngine.decode_page).
+
+        ``sampling=(sp, state)`` swaps the head argmax for the sampling
+        pipeline (see models.transformer.decode_page) and appends the
+        advanced per-slot state to the returned tuple."""
         B = int(tokens.shape[0])
         n_sub = max(B // max(b_attn, 1), 1)
-        fn = _lru_get(self._page_cache, (int(steps), n_sub), _PAGE_JIT_CAP,
+        key = (int(steps), n_sub, sampling is not None)
+        fn = _lru_get(self._page_cache, key, _PAGE_JIT_CAP,
                       lambda: jax.jit(partial(self._page_impl,
                                               steps=int(steps),
-                                              n_sub=n_sub),
+                                              n_sub=n_sub,
+                                              sampled=sampling is not None),
                                       donate_argnums=(0,)))
-        return fn(cache, tokens, lengths, remaining)
+        if sampling is None:
+            return fn(cache, tokens, lengths, remaining)
+        sp, state = sampling
+        return fn(cache, tokens, lengths, remaining, sp, state)
 
-    def _page_impl(self, cache, tokens, lengths, remaining, *, steps: int,
-                   n_sub: int):
+    def _page_impl(self, cache, tokens, lengths, remaining, sp=None,
+                   state=None, *, steps: int, n_sub: int,
+                   sampled: bool = False):
+        from repro.sampling import sample_step
+
         cfg = self.cfg
         B = tokens.shape[0]
         slices = _sub_slices(B, n_sub)
 
-        def one_step(carry, _):
-            cache, tokens, lengths, remaining = carry
+        def model_step(cache, tokens, lengths):
             h = T._embed_tokens(cfg, self.params, tokens[:, None])
 
             def layer_body(hh, xs):
@@ -197,17 +213,38 @@ class ModuleRuntime:
 
             h, new_cache = jax.lax.scan(layer_body, h,
                                         (self.params["layers"], cache))
-            nxt = self._head_impl(h)
-            live = remaining > 0
+            return h, new_cache
+
+        if not sampled:
+            def one_step(carry, _):
+                cache, tokens, lengths, remaining = carry
+                h, new_cache = model_step(cache, tokens, lengths)
+                nxt = self._head_impl(h)
+                live = remaining > 0
+                tokens = jnp.where(live, nxt, tokens)
+                lengths = lengths + live.astype(jnp.int32)
+                remaining = remaining - live.astype(jnp.int32)
+                return (new_cache, tokens, lengths, remaining), tokens
+
+            (cache, tokens, lengths, remaining), block = jax.lax.scan(
+                one_step, (cache, tokens, lengths, remaining), None,
+                length=steps)
+            return block, tokens, lengths, remaining, cache
+
+        def one_step(carry, _):
+            cache, tokens, lengths, remaining, state = carry
+            h, new_cache = model_step(cache, tokens, lengths)
+            logits = self._head_logits_impl(h)
+            nxt, live, remaining, state = sample_step(logits, remaining,
+                                                      state, sp)
             tokens = jnp.where(live, nxt, tokens)
             lengths = lengths + live.astype(jnp.int32)
-            remaining = remaining - live.astype(jnp.int32)
-            return (new_cache, tokens, lengths, remaining), tokens
+            return (new_cache, tokens, lengths, remaining, state), tokens
 
-        (cache, tokens, lengths, remaining), block = jax.lax.scan(
-            one_step, (cache, tokens, lengths, remaining), None,
+        (cache, tokens, lengths, remaining, state), block = jax.lax.scan(
+            one_step, (cache, tokens, lengths, remaining, state), None,
             length=steps)
-        return block, tokens, lengths, remaining, cache
+        return block, tokens, lengths, remaining, cache, state
 
     def expert_load(self, b_moe: int) -> Dict[str, float]:
         """Per-expert batch statistics at the MoE gate for a combined batch

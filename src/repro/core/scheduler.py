@@ -29,11 +29,12 @@ Callbacks:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 from repro.core import primitives as prim
 from repro.core.coroutine import Phase, SequenceCoroutine, Status
 from repro.core.events import EventKind, EventQueue
+from repro.sampling.params import SamplingParams
 
 
 @dataclasses.dataclass
@@ -57,12 +58,27 @@ class CoroutineScheduler:
 
     # ------------------------------------------------------------------ API
     def submit(self, prompts: Sequence[Sequence[int]],
-               max_out: Sequence[int]) -> List[int]:
-        """Distribute S_global evenly over nodes (Alg. 2 line 1)."""
+               max_out: Sequence[int],
+               sampling: Union[None, SamplingParams,
+                               Sequence[SamplingParams]] = None
+               ) -> List[int]:
+        """Distribute S_global evenly over nodes (Alg. 2 line 1).
+
+        ``sampling``: None (greedy), one SamplingParams broadcast to every
+        sequence, or one per sequence.  The params ride the coroutine, so
+        every later COMBINE/MIGRATE/PARTITION keeps them with it."""
+        if sampling is None or isinstance(sampling, SamplingParams):
+            sps = [sampling or SamplingParams()] * len(prompts)
+        else:
+            sps = list(sampling)
+            if len(sps) != len(prompts):
+                raise ValueError(
+                    f"sampling list length {len(sps)} != "
+                    f"{len(prompts)} prompts")
         ids = []
-        for i, (p, mo) in enumerate(zip(prompts, max_out)):
+        for i, (p, mo, sp) in enumerate(zip(prompts, max_out, sps)):
             co = SequenceCoroutine(seq_id=self._next_id, prompt=list(p),
-                                   max_out=int(mo))
+                                   max_out=int(mo), sampling=sp)
             co.node = self.engines[i % len(self.engines)].node_id
             self.cos[co.seq_id] = co
             ids.append(co.seq_id)

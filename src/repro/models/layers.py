@@ -213,18 +213,36 @@ def attention_decode_ring(cfg: ModelConfig, p, x, k_cache, v_cache, pos_cache,
 def cache_update(cache, new, lengths, axes=None):
     """Write ``new`` (B, 1, Hkv, dh) at position ``lengths``.
 
-    Default: one-hot mix — partitionable anywhere but costs a full cache
-    read+write per layer per step (O(S) HBM traffic).
+    Single-device / no-mesh: per-row ``dynamic_update_slice`` (vmapped) —
+    O(1) HBM traffic per step.  This replaced the one-hot mix, which cost
+    a full O(S) cache read+write per layer per step; writes whose index
+    falls outside [0, S) are dropped, matching the old one-hot semantics.
     With ``axes`` (decode regime, cache sequence dim sharded over
     ``model``): shard_map + per-shard dynamic-update-slice — only the shard
-    owning position ``lengths`` writes one token (O(1) traffic; §Perf D1).
+    owning position ``lengths`` writes one token (§Perf D1).
     """
     if axes is not None and axes.model is not None:
         mesh = compat.get_abstract_mesh()
         if not mesh.empty and axes.model in mesh.axis_names:
             return _cache_update_dus(cache, new, lengths, axes, mesh)
-    oh = jax.nn.one_hot(lengths, cache.shape[1], dtype=cache.dtype)  # (B, S)
-    return cache * (1 - oh[:, :, None, None]) + oh[:, :, None, None] * new
+    return _cache_update_dus_local(cache, new, lengths)
+
+
+def _cache_update_dus_local(cache, new, lengths):
+    """Per-row DUS write: cache (B, S, ...), new (B, 1, ...), lengths (B,).
+    Out-of-range rows (index < 0 or >= S) are no-op writes — DUS alone
+    would clamp to S-1 and clobber the last position."""
+    S = cache.shape[1]
+
+    def row(c_row, n_row, i):
+        zeros = (0,) * (c_row.ndim - 1)
+        inb = (i >= 0) & (i < S)
+        i_c = jnp.clip(i, 0, S - 1)
+        cur = jax.lax.dynamic_slice(c_row, (i_c,) + zeros, n_row.shape)
+        return jax.lax.dynamic_update_slice(
+            c_row, jnp.where(inb, n_row, cur), (i_c,) + zeros)
+
+    return jax.vmap(row)(cache, new, lengths)
 
 
 def _cache_update_dus(cache, new, lengths, axes, mesh):
@@ -259,9 +277,9 @@ def _cache_update_dus(cache, new, lengths, axes, mesh):
 
 
 def _cache_update_2d(cache, new, lengths):
-    """cache (B, S, R), new (B, 1, R)."""
-    oh = jax.nn.one_hot(lengths, cache.shape[1], dtype=cache.dtype)
-    return cache * (1 - oh[:, :, None]) + oh[:, :, None] * new
+    """cache (B, S, R), new (B, 1, R): same per-row DUS write (the MLA
+    latent cache shares the O(1)-traffic path)."""
+    return _cache_update_dus_local(cache, new, lengths)
 
 
 # ---------------------------------------------------------------------------

@@ -438,7 +438,18 @@ def prefill(cfg: ModelConfig, axes: MeshAxes, params, batch, *, hint=None,
 
 def decode_step(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
                 lengths, unroll=False):
-    """One decode step.  tokens (B,), lengths (B,) -> (next_tokens, cache)."""
+    """One greedy decode step.  tokens (B,), lengths (B,) ->
+    (next_tokens, cache)."""
+    logits, new_cache = decode_step_logits(cfg, axes, params, cache, tokens,
+                                           lengths, unroll=unroll)
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, new_cache
+
+
+def decode_step_logits(cfg: ModelConfig, axes: MeshAxes, params, cache,
+                       tokens, lengths, unroll=False):
+    """One decode step returning the raw next-token logits (B, V) so the
+    caller picks the token (argmax or the sampling pipeline)."""
     B = tokens.shape[0]
     h = _embed_tokens(cfg, params, tokens[:, None])
     if cfg.family == "audio":
@@ -477,13 +488,13 @@ def decode_step(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
 
     h = layers.apply_norm(cfg, params["final_norm"], h)
     logits = logits_fn(cfg, params, h)                           # (B,1,V)
-    next_tokens = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-    return next_tokens, new_cache
+    return logits[:, 0, :], new_cache
 
 
 def decode_page(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
-                lengths, remaining, steps: int, unroll=False):
-    """Fused decode megastep: `steps` greedy decode steps in ONE program.
+                lengths, remaining, steps: int, unroll=False,
+                sampling=None):
+    """Fused decode megastep: `steps` decode steps in ONE program.
 
     A ``lax.scan`` over ``decode_step`` that keeps tokens/lengths/KV on
     device, self-feeds the sampled token, and masks all per-slot updates
@@ -498,20 +509,46 @@ def decode_page(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
     (rows past a slot's remaining repeat its last token and must be
     discarded by the caller).  One host transfer of ``token_block``
     replaces ``steps`` per-token round-trips.
+
+    With ``sampling=(sp, state)`` (pack_params row arrays + the per-slot
+    PRNG/penalty state from repro.sampling) each step runs the full logit
+    pipeline and a Gumbel-max categorical draw instead of argmax, the
+    state rides the scan carry (split-free fold_in keys, so masked steps
+    never perturb a live slot's stream), and stop-token hits zero the
+    slot's ``remaining`` on device.  Returns the same tuple plus the
+    advanced ``state`` appended.
     """
+    if sampling is None:
+        def body(carry, _):
+            cache, tokens, lengths, remaining = carry
+            nxt, cache = decode_step(cfg, axes, params, cache, tokens,
+                                     lengths, unroll=unroll)
+            live = remaining > 0
+            tokens = jnp.where(live, nxt, tokens)
+            lengths = lengths + live.astype(jnp.int32)
+            remaining = remaining - live.astype(jnp.int32)
+            return (cache, tokens, lengths, remaining), tokens
+
+        (cache, tokens, lengths, remaining), block = jax.lax.scan(
+            body, (cache, tokens, lengths, remaining), None, length=steps)
+        return block, tokens, lengths, remaining, cache
+
+    from repro.sampling import sample_step
+    sp, state = sampling
+
     def body(carry, _):
-        cache, tokens, lengths, remaining = carry
-        nxt, cache = decode_step(cfg, axes, params, cache, tokens, lengths,
-                                 unroll=unroll)
-        live = remaining > 0
+        cache, tokens, lengths, remaining, state = carry
+        logits, cache = decode_step_logits(cfg, axes, params, cache, tokens,
+                                           lengths, unroll=unroll)
+        nxt, live, remaining, state = sample_step(logits, remaining, state,
+                                                  sp)
         tokens = jnp.where(live, nxt, tokens)
         lengths = lengths + live.astype(jnp.int32)
-        remaining = remaining - live.astype(jnp.int32)
-        return (cache, tokens, lengths, remaining), tokens
+        return (cache, tokens, lengths, remaining, state), tokens
 
-    (cache, tokens, lengths, remaining), block = jax.lax.scan(
-        body, (cache, tokens, lengths, remaining), None, length=steps)
-    return block, tokens, lengths, remaining, cache
+    (cache, tokens, lengths, remaining, state), block = jax.lax.scan(
+        body, (cache, tokens, lengths, remaining, state), None, length=steps)
+    return block, tokens, lengths, remaining, cache, state
 
 
 def _layer_decode(cfg, axes, p, c, h, lengths):

@@ -16,6 +16,7 @@ import uuid
 from typing import Any, Dict, List, Optional, Sequence
 
 from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
+from repro.sampling import SamplingParams
 
 
 @dataclasses.dataclass
@@ -24,14 +25,27 @@ class BatchRequest:
     custom_id: str
     prompt: List[int]
     max_tokens: int = 128
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
 
     @classmethod
     def from_json(cls, line: str) -> "BatchRequest":
         d = json.loads(line)
         body = d.get("body", d)
+        sp = SamplingParams(
+            temperature=float(body.get("temperature", 0.0)),
+            top_k=int(body.get("top_k", 0)),
+            top_p=float(body.get("top_p", 1.0)),
+            min_p=float(body.get("min_p", 0.0)),
+            repetition_penalty=float(body.get("repetition_penalty", 1.0)),
+            presence_penalty=float(body.get("presence_penalty", 0.0)),
+            frequency_penalty=float(body.get("frequency_penalty", 0.0)),
+            seed=body.get("seed"),
+            stop=tuple(body.get("stop", ())))
         return cls(custom_id=d.get("custom_id", str(uuid.uuid4())),
                    prompt=body["prompt"],
-                   max_tokens=int(body.get("max_tokens", 128)))
+                   max_tokens=int(body.get("max_tokens", 128)),
+                   sampling=sp)
 
 
 @dataclasses.dataclass
@@ -69,13 +83,16 @@ class BatchMaster:
         bo = self.batches[bid]
         sched = CoroutineScheduler(self.engines, self.sched_cfg)
         ids = sched.submit([r.prompt for r in self._requests],
-                           [r.max_tokens for r in self._requests])
+                           [r.max_tokens for r in self._requests],
+                           sampling=[r.sampling for r in self._requests])
         rep = sched.run(max_ticks=max_ticks)
         for req, sid in zip(self._requests, ids):
             co = sched.cos[sid]
             bo.results.append({
                 "custom_id": req.custom_id,
-                "response": {"tokens": list(co.generated)},
+                "response": {"tokens": list(co.generated),
+                             "finish_reason": (co.finish_reason if co.done
+                                               else "incomplete")},
                 "status_code": 200 if co.done else 504,
             })
             bo.request_counts["completed" if co.done else "failed"] += 1

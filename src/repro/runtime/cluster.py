@@ -120,14 +120,31 @@ class SimEngine:
         self.busy_s += dt
         for c in active:
             n = min(steps, c.remaining)
-            c.generated.extend([7] * n)
-            c.length += n
+            toks, hit = c.sampling.truncate_at_stop(
+                [self._sim_token(c, len(c.generated) + t)
+                 for t in range(n)])
+            c.stopped = c.stopped or hit
+            c.generated.extend(toks)
+            c.length += len(toks)
         # host-store metadata so migrate/refill see real lengths
         for c in active:
             if not self.host_store.has(c.seq_id):
                 self.host_store.checkpoint(c.seq_id, {}, c.length)
             else:
                 self.host_store.seqs[c.seq_id].length = c.length
+
+    @staticmethod
+    def _sim_token(co: SequenceCoroutine, idx: int) -> int:
+        """Virtual decode honors the sampling contract's *shape*: greedy
+        sequences emit the constant 7; sampled ones emit a deterministic
+        pseudo-stream of (effective seed, token index) — a pure function
+        of per-sequence state, so migration/recovery replays identically."""
+        sp = co.sampling
+        if sp.temperature <= 0.0:
+            return 7
+        h = (sp.effective_seed(co.seq_id) * 2654435761 + idx * 40503) \
+            & 0xFFFFFFFF
+        return 7 + (h >> 16) % 89
 
     def sync_appends(self, active):
         # async appends overlap with decode; only the page-boundary barrier
@@ -146,8 +163,10 @@ class SimEngine:
         for co in cos:
             self.host_store.checkpoint(co.seq_id, {}, co.prompt_len)
             co.length = co.prompt_len
-            co.last_token = 7
-            co.generated.append(7)
+            co.last_token = self._sim_token(co, 0)
+            co.generated.append(co.last_token)
+            if co.last_token in co.sampling.stop:
+                co.stopped = True
             co.phase = Phase.DECODING
             co.status = Status.INACTIVE
 

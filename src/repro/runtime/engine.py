@@ -29,6 +29,14 @@ Supports dense and MoE families (caches {"k","v"}); set
 ``module_granularity=True`` to decode through the Algorithm-1 module
 runtime (per-sub-batch attention + COMBINE before MoE), which fuses the
 same way via ``ModuleRuntime.forward_decode_page``.
+
+Sampling: when any active coroutine carries non-default SamplingParams,
+``decode_page`` switches to the sampled megastep variant — same fused
+scan with the per-slot PRNG position and penalty counts riding the carry
+(repro.sampling) — still one device→host transfer per page.  Per-slot
+sampling state is re-derived from the coroutine at ``install_slot``
+(keys are fold_in(seed, token_index), counts a bincount of its tokens),
+so slot churn and migration never perturb a sequence's sampled stream.
 """
 from __future__ import annotations
 
@@ -40,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sampling as smp
 from repro.core.coroutine import Phase, SequenceCoroutine, Status
 from repro.core.forward import ModuleRuntime, _lru_get
 from repro.core.primitives import PrimitiveStats
@@ -49,7 +58,7 @@ from repro.models import transformer as T
 from repro.models.api import MeshAxes, ModelConfig
 
 _PREFILL_JIT_CAP = 8    # LRU cap on (B, S)-bucketed prefill executables
-_MEGASTEP_JIT_CAP = 8   # LRU cap on scan-length-bucketed megasteps
+_MEGASTEP_JIT_CAP = 16  # LRU cap on (scan-length, sampled)-keyed megasteps
 
 
 def _pow2(n: int) -> int:
@@ -87,10 +96,23 @@ class NodeEngine:
         self.slot_owner: List[Optional[int]] = [None] * max_active
         self.synced_len: Dict[int, int] = {}
 
+        # per-slot sampling params (host mirror, uploaded lazily) + the
+        # device-resident sampling state that rides the megastep carry
+        V = T.padded_vocab(cfg)
+        self._sp_host = smp.pack_params([smp.SamplingParams()] * max_active,
+                                        list(range(max_active)))
+        self._sp_dev: Optional[Dict] = None
+        self._sample_state = {
+            "base_key": jnp.zeros((max_active, 2), jnp.uint32),
+            "gen_count": jnp.zeros((max_active,), jnp.int32),
+            "counts": jnp.zeros((max_active, V), jnp.int32),
+            "prompt_counts": jnp.zeros((max_active, V), jnp.int32),
+        }
+
         self._decode = jax.jit(
             lambda p, c, t, l: T.decode_step(cfg, self.axes, p, c, t, l),
             donate_argnums=(1,))
-        self._megastep_cache: "OrderedDict[int, object]" = OrderedDict()
+        self._megastep_cache: "OrderedDict[tuple, object]" = OrderedDict()
         self._prefill_cache: "OrderedDict[tuple, object]" = OrderedDict()
         self.module_rt = (ModuleRuntime(cfg, self.axes, self.params)
                           if module_granularity else None)
@@ -139,6 +161,48 @@ class NodeEngine:
         self.tokens = self.tokens.at[s].set(co.last_token)
         self.lengths = self.lengths.at[s].set(co.length)
         self.synced_len[co.seq_id] = co.length
+        self._install_sampling(co)
+
+    def _install_sampling(self, co: SequenceCoroutine):
+        """Bind a slot's sampling params + re-derived device state.
+
+        The PRNG position is just len(generated) (keys are fold_in(base,
+        t), not a split chain) and penalty counts are bincounts of the
+        coroutine's tokens, so a coroutine arriving via COMBINE or MIGRATE
+        resumes its sampled stream exactly where it left off — no device
+        sampling state ever crosses nodes.  Greedy-default sequences only
+        reset the slot's params row (a stale sampled row must not make the
+        sampled megastep draw for them); their state rows are don't-care
+        (temperature<=0 takes the argmax branch), so the O(V) count
+        derivation and device scatters are skipped on the slot-churn hot
+        path of all-greedy workloads."""
+        s = co.slot
+        row = smp.pack_params([co.sampling], [co.seq_id])
+        for k in self._sp_host:
+            self._sp_host[k][s] = row[k][0]
+        self._sp_dev = None             # host mirror dirty; re-upload lazily
+        if co.sampling.is_greedy_default:
+            return
+        st = self._sample_state
+        V = st["counts"].shape[1]
+        st_row = smp.init_state(row["seed"], [co.prompt], [co.generated], V)
+        st["base_key"] = st["base_key"].at[s].set(
+            smp.base_keys(st_row["seed"])[0])
+        st["gen_count"] = st["gen_count"].at[s].set(
+            int(st_row["gen_count"][0]))
+        st["counts"] = st["counts"].at[s].set(
+            jnp.asarray(st_row["counts"][0]))
+        st["prompt_counts"] = st["prompt_counts"].at[s].set(
+            jnp.asarray(st_row["prompt_counts"][0]))
+
+    def _sp_device(self) -> Dict:
+        """Packed per-slot sampling params as device arrays (cached until
+        a slot install dirties the host mirror)."""
+        if self._sp_dev is None:
+            self._sp_dev = {k: jnp.asarray(v)
+                            for k, v in self._sp_host.items()
+                            if k != "seed"}
+        return self._sp_dev
 
     def reconfigure_partition(self, co: SequenceCoroutine, group: List[int]):
         # On TPU: re-lower the decode step over the group mesh (sequence-
@@ -168,52 +232,86 @@ class NodeEngine:
         steps = min(P, max(c.remaining for c in active))
         if steps <= 0:
             return
-        if not self.fused:
+        sampled = any(not c.sampling.is_greedy_default for c in active)
+        if not self.fused and not sampled:
             return self._decode_page_looped(active, P)
         # exact step count via pow2 decomposition (40 -> 32+8): each chunk
         # is a cached scan executable (≤ log2(P) distinct sizes), chunks
         # chain on device, blocks concatenate on device -> no masked tail
-        # compute and still ONE host transfer for the whole page
+        # compute and still ONE host transfer for the whole page.  When
+        # any active sequence carries non-default SamplingParams the same
+        # loop runs the sampled megastep variant: the per-slot sampling
+        # state (fold_in PRNG position, penalty counts) rides the scan
+        # carry and stop-token hits mask slots on device.  Non-fused
+        # sampled (baseline): chunk size 1, one transfer per token.
         rem = np.zeros((self.max_active,), np.int32)
         for co in active:
             rem[co.slot] = co.remaining
         rem_j = jnp.asarray(rem)
+        sp = self._sp_device() if sampled else None
+        state = self._sample_state
         blocks = []
         left = steps
         while left > 0:
-            chunk = 1 << (left.bit_length() - 1)    # largest pow2 <= left
+            chunk = (1 << (left.bit_length() - 1)) if self.fused else 1
             if self.module_rt is not None:
-                blk, self.tokens, self.lengths, rem_j, self.cache = \
-                    self.module_rt.forward_decode_page(
-                        self.tokens, self.cache, self.lengths, rem_j,
-                        self.b_attn, chunk)
+                out = self.module_rt.forward_decode_page(
+                    self.tokens, self.cache, self.lengths, rem_j,
+                    self.b_attn, chunk,
+                    sampling=(sp, state) if sampled else None)
             else:
-                mega = self._get_megastep(chunk)
-                blk, self.tokens, self.lengths, rem_j, self.cache = mega(
-                    self.params, self.cache, self.tokens, self.lengths,
-                    rem_j)
-            blocks.append(blk)
+                mega = self._get_megastep(chunk, sampled)
+                args = (self.params, self.cache, self.tokens, self.lengths,
+                        rem_j) + ((sp, state) if sampled else ())
+                out = mega(*args)
+            if sampled:
+                blk, self.tokens, self.lengths, rem_j, self.cache, state = \
+                    out
+            else:
+                blk, self.tokens, self.lengths, rem_j, self.cache = out
+            blocks.append(blk if self.fused else self._to_host(blk))
             left -= chunk
+        if sampled:
+            self._sample_state = state
         self.decode_steps += steps
-        block = blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks)
-        block_np = self._to_host(block)     # the ONE d2h transfer per page
+        if self.fused:
+            block = blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks)
+            block_np = self._to_host(block)  # the ONE d2h transfer per page
+        else:
+            block_np = np.concatenate(blocks)
+        self._apply_block(active, block_np, steps)
+
+    def _apply_block(self, active: Sequence[SequenceCoroutine], block_np,
+                     steps: int):
+        """Apply a (steps, max_active) token block to coroutine state,
+        truncating at each sequence's first stop-token hit (the stop token
+        is emitted, then the sequence halts — mirroring the on-device
+        remaining-zeroing)."""
         for co in active:
             n = min(steps, co.remaining)
             if n <= 0:
                 continue
-            toks = block_np[:n, co.slot].tolist()
+            toks, hit = co.sampling.truncate_at_stop(block_np[:n, co.slot])
+            co.stopped = co.stopped or hit
             co.generated.extend(toks)
             co.last_token = toks[-1]
-            co.length += n
+            co.length += len(toks)
 
-    def _get_megastep(self, steps: int):
+    def _get_megastep(self, steps: int, sampled: bool = False):
         def make():
-            def _mega(params, cache, tokens, lengths, remaining):
-                return T.decode_page(self.cfg, self.axes, params, cache,
-                                     tokens, lengths, remaining, steps)
+            if sampled:
+                def _mega(params, cache, tokens, lengths, remaining, sp,
+                          state):
+                    return T.decode_page(self.cfg, self.axes, params, cache,
+                                         tokens, lengths, remaining, steps,
+                                         sampling=(sp, state))
+            else:
+                def _mega(params, cache, tokens, lengths, remaining):
+                    return T.decode_page(self.cfg, self.axes, params, cache,
+                                         tokens, lengths, remaining, steps)
             return jax.jit(_mega, donate_argnums=(1,))
-        return _lru_get(self._megastep_cache, steps, _MEGASTEP_JIT_CAP,
-                        make)
+        return _lru_get(self._megastep_cache, (steps, sampled),
+                        _MEGASTEP_JIT_CAP, make)
 
     def _decode_page_looped(self, active: Sequence[SequenceCoroutine],
                             P: int):
@@ -259,6 +357,9 @@ class NodeEngine:
         with W = the largest per-slot span (≤ one page in steady state),
         moved with ONE host transfer, then appended page-by-page into the
         host store on the CPU side."""
+        assert len({leaf.dtype for leaf in self.cache.values()}) == 1, \
+            "batched gather concatenates leaves: mixed dtypes would be " \
+            "silently promoted — add a per-dtype blob before relaxing this"
         todo = []
         for co in active:
             if co.slot is None:
@@ -330,15 +431,59 @@ class NodeEngine:
         fn = _lru_get(self._prefill_cache, (B, S), _PREFILL_JIT_CAP, make)
         logits, cache = fn(self.params, jnp.asarray(toks),
                            jnp.asarray(last_idx))
-        logits_np = self._to_host(logits)
+        n = len(cos)
+        # batched host-checkpoint gather: flatten every leaf's first-n rows
+        # into ONE (L, n, W, F_total) blob and move it with a single host
+        # transfer (the per-sequence/per-leaf slicing this replaces paid
+        # n_seqs * n_leaves small copies per prefill batch)
+        W = maxlen
+        assert len({leaf.dtype for leaf in cache.values()}) == 1, \
+            "batched gather concatenates leaves: mixed dtypes would be " \
+            "silently promoted — add a per-dtype blob before relaxing this"
+        metas, parts = [], []
+        for name, leaf in cache.items():
+            seg = leaf[:, :n, :W]                   # (L, n, W, *trail)
+            trail = seg.shape[3:]
+            metas.append((name, trail, int(np.prod(trail)) if trail else 1))
+            parts.append(seg.reshape(seg.shape[0], n, W, -1))
+        blob = self._to_host(jnp.concatenate(parts, axis=-1))
+        offs, off = {}, 0
+        for name, trail, f in metas:
+            offs[name] = (off, off + f)
+            off += f
+        L = blob.shape[0]
+        # first generated token: device-sampled when any sequence asks for
+        # it (key = fold_in(PRNGKey(seed), 0), counts over the prompt);
+        # all-greedy batches keep the host argmax
+        if any(not c.sampling.is_greedy_default for c in cos):
+            sp = smp.pack_params([c.sampling for c in cos],
+                                 [c.seq_id for c in cos])
+            st = smp.init_state(sp["seed"], [list(c.prompt) for c in cos],
+                                [[] for _ in cos],
+                                T.padded_vocab(self.cfg))
+            keys = smp.step_keys(smp.base_keys(st["seed"]),
+                                 jnp.asarray(st["gen_count"]))
+            first = self._to_host(smp.sample(
+                logits[:n, 0, :], jnp.asarray(st["prompt_counts"]),
+                jnp.asarray(st["counts"]),
+                {k: jnp.asarray(v) for k, v in sp.items() if k != "seed"},
+                keys))
+        else:
+            logits_np = self._to_host(logits)
+            first = np.argmax(logits_np[:n, 0], axis=-1)
         for i, co in enumerate(cos):
-            slices = {name: np.asarray(leaf[:, i, : co.prompt_len])
-                      for name, leaf in cache.items()}
-            self.host_store.checkpoint(co.seq_id, slices, co.prompt_len)
-            co.last_token = int(np.argmax(logits_np[i, 0]))
+            pl = co.prompt_len
+            slices = {}
+            for name, trail, _ in metas:
+                lo, hi = offs[name]
+                slices[name] = blob[:, i, :pl, lo:hi].reshape((L, pl) + trail)
+            self.host_store.checkpoint(co.seq_id, slices, pl)
+            co.last_token = int(first[i])
             co.generated.append(co.last_token)
-            co.length = co.prompt_len
+            if co.last_token in co.sampling.stop:
+                co.stopped = True
+            co.length = pl
             co.phase = Phase.DECODING
             co.status = Status.INACTIVE
-            self.synced_len[co.seq_id] = co.prompt_len
-            self.prefill_tokens += co.prompt_len
+            self.synced_len[co.seq_id] = pl
+            self.prefill_tokens += pl

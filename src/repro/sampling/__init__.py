@@ -1,0 +1,40 @@
+"""On-device sampling subsystem: temperature / top-k / top-p decoding.
+
+The subsystem has three layers:
+
+* ``params``     — the host-side :class:`SamplingParams` dataclass carried
+  on every :class:`~repro.core.coroutine.SequenceCoroutine`, plus
+  ``pack_params`` which turns a list of per-sequence params into the
+  (B,)-batched device arrays the jitted pipeline consumes.
+* ``processors`` — pure jittable logit processors (penalties, temperature,
+  top-k, top-p, min-p).  Every processor is an exact identity at its
+  parameter's default value, so a default-constructed SamplingParams run
+  through the full pipeline reproduces greedy argmax bit-for-bit.
+* ``sample``     — the per-slot ``sample_one`` function and the batched
+  ``sample`` entry point (``jax.vmap`` across device slots), plus the
+  deterministic PRNG-state helpers threaded as scan carry through the
+  fused decode megastep.
+
+Reproducibility contract: the key used for a sequence's t-th sampled
+token is ``fold_in(PRNGKey(seed), t)`` — a pure function of the
+per-sequence seed and the token index, never of batch composition, slot
+index, page size or node placement.  Host-side state (penalty counts,
+token index) is re-derivable from the coroutine's token list, so
+YIELD/COMBINE/MIGRATE/PARTITION preserve the sampled stream exactly.
+"""
+from repro.sampling.params import (MAX_STOP_TOKENS, SamplingParams,
+                                   pack_params)
+from repro.sampling.processors import (apply_min_p, apply_penalties,
+                                       apply_temperature, apply_top_k,
+                                       apply_top_p, process_logits)
+from repro.sampling.sample import (base_keys, init_state, sample,
+                                   sample_one, sample_step, step_keys,
+                                   stop_hit)
+
+__all__ = [
+    "MAX_STOP_TOKENS", "SamplingParams", "pack_params",
+    "apply_penalties", "apply_temperature", "apply_top_k", "apply_top_p",
+    "apply_min_p", "process_logits",
+    "base_keys", "init_state", "sample", "sample_one", "sample_step",
+    "step_keys", "stop_hit",
+]

@@ -1,0 +1,91 @@
+"""Pure jittable logit processors.
+
+Each processor takes a single slot's logits row (V,) float32 plus scalar
+parameters and returns a transformed row.  They compose in the standard
+order (penalties -> temperature -> top-k -> top-p -> min-p) and every one
+of them is an EXACT identity at its parameter's disabled value: dividing
+by a 1.0 penalty and scaling by a 1.0 temperature are exact float ops, and
+the masks are gated with ``jnp.where`` on the disabled predicate.  That
+exactness is what lets ``SamplingParams()`` reproduce PR 1's argmax
+megastep token-for-token (tests/test_sampling.py::test_greedy_parity).
+
+All processors are batched across device slots with ``jax.vmap`` in
+sample.py — never loop over slots on the host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30      # matches the attention-mask convention in models/
+
+
+def apply_penalties(logits, counts_full, counts_gen, rep, pres, freq):
+    """Repetition / presence / frequency penalties for one slot.
+
+    logits (V,) f32; counts_full (V,) int32 occurrence counts over
+    prompt+generated; counts_gen (V,) int32 over generated tokens only;
+    rep/pres/freq scalars.  Repetition follows the HF full-context
+    convention (divides positive logits, multiplies negative ones, for
+    any token seen in prompt OR output); presence/frequency follow the
+    OpenAI/vLLM convention and penalize only tokens the model itself
+    generated (a prompt that repeats a token must not pre-ban it).
+    """
+    seen = counts_full > 0
+    rep_l = jnp.where(logits > 0, logits / rep, logits * rep)
+    logits = jnp.where(seen, rep_l, logits)
+    cg = counts_gen.astype(jnp.float32)
+    return logits - freq * cg - pres * (counts_gen > 0).astype(jnp.float32)
+
+
+def apply_temperature(logits, temperature):
+    """Scale by 1/T; T <= 0 (greedy) leaves logits untouched — the
+    sampler takes the argmax branch in that case."""
+    scale = jnp.where(temperature > 0.0, temperature, 1.0)
+    return logits / scale
+
+
+def apply_top_k(logits, k):
+    """Keep the k highest logits (k == 0 disables).  Ties at the k-th
+    value are all kept (standard behavior)."""
+    V = logits.shape[-1]
+    kth_idx = jnp.clip(k - 1, 0, V - 1)
+    kth = jnp.sort(logits)[::-1][kth_idx]
+    keep = (logits >= kth) | (k <= 0)
+    return jnp.where(keep, logits, _NEG_INF)
+
+
+def apply_top_p(logits, p):
+    """Nucleus sampling: keep the smallest prefix of the sorted
+    distribution whose cumulative probability reaches p (p >= 1 disables).
+    The top token is always kept (exclusive-cumsum comparison)."""
+    sl = jnp.sort(logits)[::-1]
+    probs = jax.nn.softmax(sl)
+    cum_excl = jnp.cumsum(probs) - probs
+    kept = jnp.where(cum_excl < p, sl, jnp.inf)
+    kth = jnp.min(kept)
+    keep = (logits >= kth) | (p >= 1.0)
+    return jnp.where(keep, logits, _NEG_INF)
+
+
+def apply_min_p(logits, min_p):
+    """Drop tokens whose probability is below min_p * max probability
+    (min_p == 0 disables)."""
+    probs = jax.nn.softmax(logits)
+    keep = (probs >= min_p * jnp.max(probs)) | (min_p <= 0.0)
+    return jnp.where(keep, logits, _NEG_INF)
+
+
+def process_logits(logits, counts_full, counts_gen, sp_row):
+    """Full pipeline for one slot: penalties -> temperature -> top-k ->
+    top-p -> min-p.  ``sp_row`` is one row of the pack_params arrays."""
+    logits = logits.astype(jnp.float32)
+    logits = apply_penalties(logits, counts_full, counts_gen,
+                             sp_row["repetition_penalty"],
+                             sp_row["presence_penalty"],
+                             sp_row["frequency_penalty"])
+    logits = apply_temperature(logits, sp_row["temperature"])
+    logits = apply_top_k(logits, sp_row["top_k"])
+    logits = apply_top_p(logits, sp_row["top_p"])
+    logits = apply_min_p(logits, sp_row["min_p"])
+    return logits

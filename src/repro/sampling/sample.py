@@ -1,0 +1,131 @@
+"""Batched sampling entry point + the scan-carried PRNG/penalty state.
+
+Key discipline
+--------------
+The key for a sequence's t-th generated token is
+``fold_in(PRNGKey(seed), t)`` — derived fresh every step from the
+constant per-slot base key and a carried token counter, NOT an evolving
+split chain.  A split chain would make the stream depend on how many
+scan steps the slot sat masked in (batch composition) and would be
+unreconstructible after MIGRATE; fold_in(base, t) is a pure function of
+(seed, t), so any node can resume the stream from the coroutine's token
+count alone.
+
+Sampling itself is the Gumbel-max trick: ``argmax(logits + gumbel)`` is
+an exact categorical draw from ``softmax(logits)``, costs one argmax (no
+cumsum search), and degrades to plain argmax when temperature <= 0.
+
+State carried per slot through the megastep scan:
+* ``gen_count``     (B,) int32   — tokens generated so far (key index)
+* ``counts``        (B, V) int32 — generated-token counts (presence/
+  frequency penalties; advanced in-scan)
+* ``prompt_counts`` (B, V) int32 — prompt-token counts (loop-invariant;
+  repetition penalty sees prompt_counts + counts)
+
+All are re-derivable host-side from the coroutine (len(generated),
+bincounts of generated / prompt), which is why YIELD/COMBINE/MIGRATE need
+no extra device state movement.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def base_keys(seeds) -> jnp.ndarray:
+    """(B,) uint32 seeds -> (B, 2) raw threefry key array."""
+    return jax.vmap(lambda s: jax.random.PRNGKey(s))(
+        jnp.asarray(seeds, jnp.uint32))
+
+
+def _bincounts(token_lists, vocab: int) -> np.ndarray:
+    out = np.zeros((len(token_lists), vocab), np.int32)
+    for i, toks in enumerate(token_lists):
+        if toks:
+            out[i] = np.bincount(
+                np.asarray(toks, np.int64), minlength=vocab)[:vocab]
+    return out
+
+
+def init_state(seeds, prompt_lists, generated_lists,
+               vocab: int) -> Dict[str, np.ndarray]:
+    """Host-side state for a batch of slots (install/prefill time).
+
+    seeds (B,) ints; prompt_lists / generated_lists: per-slot token ids
+    (penalty counts and the PRNG position are recomputed from them, never
+    migrated as device state)."""
+    return {"seed": np.asarray(seeds, np.uint32),
+            "gen_count": np.asarray([len(g) for g in generated_lists],
+                                    np.int32),
+            "counts": _bincounts(generated_lists, vocab),
+            "prompt_counts": _bincounts(prompt_lists, vocab)}
+
+
+def step_keys(base, gen_count):
+    """Per-slot key for the current step: fold_in(base_b, gen_count_b)."""
+    return jax.vmap(jax.random.fold_in)(base, gen_count)
+
+
+def sample_one(logits, counts_full, counts_gen, sp_row, key):
+    """Sample one token for one slot.  logits (V,) f32, counts_* (V,)
+    i32, sp_row: one row of pack_params arrays, key: (2,) raw PRNG key.
+    Returns int32 token id."""
+    from repro.sampling.processors import process_logits
+
+    proc = process_logits(logits, counts_full, counts_gen, sp_row)
+    greedy_tok = jnp.argmax(proc)
+    gumbel = jax.random.gumbel(key, proc.shape, jnp.float32)
+    sampled_tok = jnp.argmax(proc + gumbel)
+    return jnp.where(sp_row["temperature"] <= 0.0, greedy_tok,
+                     sampled_tok).astype(jnp.int32)
+
+
+def sample(logits, counts_full, counts_gen, sp, keys):
+    """Batched sampling, vmapped across device slots.
+
+    logits (B, V), counts_* (B, V), sp: dict of (B,)-rows from
+    pack_params (the "stop"/"seed" entries are ignored here), keys (B, 2).
+    """
+    rows = {k: sp[k] for k in ("temperature", "top_k", "top_p", "min_p",
+                               "repetition_penalty", "presence_penalty",
+                               "frequency_penalty")}
+    return jax.vmap(sample_one)(logits, counts_full, counts_gen, rows,
+                                keys)
+
+
+def stop_hit(tokens, stop_table):
+    """(B,) bool: did slot b's token land in its stop set?  stop_table
+    (B, MAX_STOP_TOKENS) int32 padded with -1 (never matches)."""
+    return jnp.any(tokens[:, None] == stop_table, axis=1)
+
+
+def sample_step(logits, remaining, state, sp):
+    """One fused-megastep sampling step for the whole batch.
+
+    Consumes the (B, V) logits the model head produced, draws one token
+    per slot with the per-slot fold_in key, and advances the carried
+    state for LIVE slots only (masked slots must not consume randomness
+    or counts, or batch composition would perturb the stream).
+
+    Returns (next_tokens (B,) i32, live (B,) bool, new_remaining, new_state).
+    Stop-token hits zero the slot's remaining AFTER the stop token is
+    emitted, exactly mirroring the host-side truncation.
+    """
+    base = state["base_key"]
+    gen_count = state["gen_count"]
+    counts = state["counts"]
+    prompt_counts = state["prompt_counts"]
+    keys = step_keys(base, gen_count)
+    nxt = sample(logits, prompt_counts + counts, counts, sp, keys)
+    live = remaining > 0
+    hit = stop_hit(nxt, sp["stop"]) & live
+    B = nxt.shape[0]
+    counts = counts.at[jnp.arange(B), nxt].add(live.astype(jnp.int32))
+    gen_count = gen_count + live.astype(jnp.int32)
+    new_remaining = jnp.where(hit, 0, remaining - live.astype(jnp.int32))
+    return nxt, live, new_remaining, {
+        "base_key": base, "gen_count": gen_count, "counts": counts,
+        "prompt_counts": prompt_counts}

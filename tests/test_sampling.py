@@ -1,0 +1,356 @@
+"""On-device sampling subsystem: distribution correctness (chi-square vs a
+NumPy reference), exact greedy parity with the PR 1 argmax megastep, the
+one-transfer-per-page contract under sampling, and per-sequence seed
+reproducibility across batch composition and mid-stream migration."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from scipy import stats as sp_stats
+
+from repro import sampling as S
+from repro.configs import default_sampling, reduced_config
+from repro.core import primitives as prim
+from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
+from repro.runtime.engine import NodeEngine
+from repro.sampling import SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# NumPy reference sampler (distribution ground truth)
+# ---------------------------------------------------------------------------
+
+
+def ref_probs(logits, *, temperature=1.0, top_k=0, top_p=1.0, min_p=0.0):
+    """Reference distribution: temperature -> top-k -> top-p -> min-p,
+    same processor order as repro.sampling.processors."""
+    l = np.asarray(logits, np.float64) / temperature
+    if top_k > 0:
+        kth = np.sort(l)[::-1][min(top_k, len(l)) - 1]
+        l = np.where(l >= kth, l, -np.inf)
+    if top_p < 1.0:
+        order = np.argsort(l)[::-1]
+        p = np.exp(l[order] - np.max(l))
+        p /= p.sum()
+        cum_excl = np.cumsum(p) - p
+        kept_logit = l[order][cum_excl < top_p]
+        l = np.where(l >= kept_logit.min(), l, -np.inf)
+    if min_p > 0.0:
+        p = np.exp(l - np.nanmax(np.where(np.isfinite(l), l, np.nan)))
+        p = p / np.nansum(np.where(np.isfinite(l), p, 0.0))
+        pm = np.where(np.isfinite(l), p, 0.0)
+        l = np.where(pm >= min_p * pm.max(), l, -np.inf)
+    p = np.exp(l - np.max(l[np.isfinite(l)]))
+    p[~np.isfinite(l)] = 0.0
+    return p / p.sum()
+
+
+def draw_many(logits, sp_kwargs, n, seed=0):
+    """Draw n tokens from sample(): one slot per draw, key =
+    fold_in(PRNGKey(seed), i) — exactly the megastep's key discipline."""
+    V = len(logits)
+    row = {"temperature": 1.0, "top_k": 0, "top_p": 1.0, "min_p": 0.0,
+           "repetition_penalty": 1.0, "presence_penalty": 0.0,
+           "frequency_penalty": 0.0}
+    row.update(sp_kwargs)
+    sp = {k: jnp.full((n,), v, jnp.int32 if k == "top_k" else jnp.float32)
+          for k, v in row.items()}
+    keys = S.step_keys(S.base_keys(np.full((n,), seed, np.uint32)),
+                       jnp.arange(n, dtype=jnp.int32))
+    zeros = jnp.zeros((n, V), jnp.int32)
+    toks = S.sample(jnp.broadcast_to(jnp.asarray(logits, jnp.float32),
+                                     (n, V)),
+                    zeros, zeros, sp, keys)
+    return np.asarray(toks)
+
+
+def chi_square_check(tokens, probs, alpha=1e-3):
+    """Pearson chi-square of observed token counts vs expected; also
+    asserts no draw landed on a zero-probability token."""
+    n = len(tokens)
+    obs = np.bincount(tokens, minlength=len(probs)).astype(np.float64)
+    assert obs[probs == 0].sum() == 0, "drew a filtered (p=0) token"
+    exp = n * probs
+    live = exp > 0
+    chi2 = float(((obs[live] - exp[live]) ** 2 / exp[live]).sum())
+    df = int(live.sum()) - 1
+    crit = float(sp_stats.chi2.ppf(1 - alpha, df))
+    assert chi2 < crit, f"chi2={chi2:.1f} >= crit={crit:.1f} (df={df})"
+
+
+@pytest.fixture(scope="module")
+def fixed_logits():
+    return np.random.default_rng(7).normal(0.0, 2.0, 24)
+
+
+N_DRAWS = 4000
+
+
+def test_chi_square_temperature(fixed_logits):
+    for temp in (0.5, 1.0, 1.7):
+        toks = draw_many(fixed_logits, {"temperature": temp}, N_DRAWS,
+                         seed=1)
+        chi_square_check(toks, ref_probs(fixed_logits, temperature=temp))
+
+
+def test_chi_square_top_k(fixed_logits):
+    toks = draw_many(fixed_logits, {"temperature": 1.0, "top_k": 5},
+                     N_DRAWS, seed=2)
+    chi_square_check(toks, ref_probs(fixed_logits, top_k=5))
+
+
+def test_chi_square_top_p(fixed_logits):
+    toks = draw_many(fixed_logits, {"temperature": 0.9, "top_p": 0.7},
+                     N_DRAWS, seed=3)
+    chi_square_check(toks, ref_probs(fixed_logits, temperature=0.9,
+                                     top_p=0.7))
+
+
+def test_chi_square_combined(fixed_logits):
+    kw = {"temperature": 0.8, "top_k": 10, "top_p": 0.9, "min_p": 0.02}
+    toks = draw_many(fixed_logits, kw, N_DRAWS, seed=4)
+    chi_square_check(toks, ref_probs(fixed_logits, **kw))
+
+
+# ---------------------------------------------------------------------------
+# processor unit properties
+# ---------------------------------------------------------------------------
+
+
+def test_default_pipeline_is_exact_identity(fixed_logits):
+    """SamplingParams() processors must be a BITWISE identity — this is
+    what makes temperature=0 reproduce PR 1's argmax megastep."""
+    row = {k: jnp.asarray(v)[0] for k, v in S.pack_params(
+        [SamplingParams()], [0]).items() if k not in ("stop", "seed")}
+    l = jnp.asarray(fixed_logits, jnp.float32)
+    zeros = jnp.zeros((len(fixed_logits),), jnp.int32)
+    out = S.process_logits(l, zeros, zeros, row)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(l))
+
+
+def test_top_k_top_p_masks(fixed_logits):
+    l = jnp.asarray(fixed_logits, jnp.float32)
+    kept = np.isfinite(np.where(np.asarray(
+        S.apply_top_k(l, jnp.asarray(5))) <= -1e29, -np.inf,
+        np.asarray(S.apply_top_k(l, jnp.asarray(5)))))
+    assert kept.sum() == 5
+    assert set(np.flatnonzero(kept)) == set(np.argsort(fixed_logits)[-5:])
+    out_p = np.asarray(S.apply_top_p(l, jnp.asarray(0.6)))
+    ref = ref_probs(fixed_logits, top_p=0.6)
+    assert set(np.flatnonzero(out_p > -1e29)) == set(np.flatnonzero(ref))
+
+
+def test_penalties_shift_distribution():
+    logits = jnp.zeros((8,), jnp.float32) + 1.0
+    counts = jnp.asarray([3, 1, 0, 0, 0, 0, 0, 0], jnp.int32)
+    out = np.asarray(S.apply_penalties(logits, counts, counts,
+                                       jnp.asarray(2.0), jnp.asarray(0.5),
+                                       jnp.asarray(0.25)))
+    # token 0: 1/2 - 0.25*3 - 0.5 = -0.75; token 1: 1/2 - 0.25 - 0.5
+    np.testing.assert_allclose(out[0], -0.75, atol=1e-6)
+    np.testing.assert_allclose(out[1], -0.25, atol=1e-6)
+    np.testing.assert_allclose(out[2:], 1.0, atol=1e-6)
+    # prompt-only occurrences: repetition applies, presence/frequency
+    # must NOT (OpenAI/vLLM semantics penalize generated tokens only)
+    zeros = jnp.zeros((8,), jnp.int32)
+    out2 = np.asarray(S.apply_penalties(logits, counts, zeros,
+                                        jnp.asarray(2.0), jnp.asarray(0.5),
+                                        jnp.asarray(0.25)))
+    np.testing.assert_allclose(out2[:2], 0.5, atol=1e-6)
+    np.testing.assert_allclose(out2[2:], 1.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def _run(cfg, prompts, max_out, sampling, *, page_size=8, max_active=3,
+         fused=True, **kw):
+    eng = NodeEngine(cfg, max_active=max_active, max_len=128,
+                     page_size=page_size, seed=0, fused=fused, **kw)
+    sched = CoroutineScheduler([eng], SchedulerConfig(page_size=page_size))
+    ids = sched.submit(prompts, max_out, sampling=sampling)
+    rep = sched.run(max_ticks=500)
+    assert rep["completed"] == len(prompts)
+    return [sched.cos[i] for i in ids], eng
+
+
+@pytest.fixture(scope="module")
+def dense_cfg():
+    return reduced_config("llama3_2_1b")
+
+
+@pytest.fixture(scope="module")
+def prompts(dense_cfg):
+    rng = np.random.default_rng(3)
+    return [list(rng.integers(2, dense_cfg.vocab_size, int(n)))
+            for n in rng.integers(4, 12, 4)]
+
+
+def test_greedy_parity_temperature_zero(dense_cfg, prompts):
+    """temperature=0 through the SAMPLED megastep (seed set, so the
+    sampling pipeline runs) reproduces the greedy argmax megastep
+    token-for-token — including the prefill-sampled first token."""
+    max_out = [14, 6, 11, 9]
+    greedy, _ = _run(dense_cfg, prompts, max_out, None)
+    t0, _ = _run(dense_cfg, prompts, max_out,
+                 SamplingParams(temperature=0.0, seed=99))
+    assert [c.generated for c in t0] == [c.generated for c in greedy]
+
+
+def test_greedy_parity_module_granularity():
+    cfg = reduced_config("phi3_5_moe")
+    rng = np.random.default_rng(5)
+    prompts = [list(rng.integers(2, cfg.vocab_size, int(n)))
+               for n in rng.integers(4, 10, 3)]
+    greedy, _ = _run(cfg, prompts, [8, 5, 10], None, max_active=3,
+                     module_granularity=True, b_attn=2)
+    t0, _ = _run(cfg, prompts, [8, 5, 10],
+                 SamplingParams(temperature=0.0, seed=13), max_active=3,
+                 module_granularity=True, b_attn=2)
+    assert [c.generated for c in t0] == [c.generated for c in greedy]
+
+
+def test_sampled_fused_matches_looped(dense_cfg, prompts):
+    """The per-token looped path and the fused megastep consume the SAME
+    fold_in key stream -> identical sampled tokens."""
+    sp = SamplingParams(temperature=0.9, top_k=40, top_p=0.95)
+    f, ef = _run(dense_cfg, prompts, [12, 7, 9, 5], sp, fused=True)
+    l, el = _run(dense_cfg, prompts, [12, 7, 9, 5], sp, fused=False)
+    assert [c.generated for c in f] == [c.generated for c in l]
+    assert ef.d2h_transfers < el.d2h_transfers
+
+
+def test_sampled_one_transfer_per_decode_page(dense_cfg):
+    """Transfer-spy: sampled decode (temperature>0, top-k/top-p active)
+    still performs exactly ONE device->host copy per decode_page."""
+    eng = NodeEngine(dense_cfg, max_active=3, max_len=128, page_size=8,
+                     seed=0)
+    sched = CoroutineScheduler([eng], SchedulerConfig(page_size=8))
+    sched.submit([[2, 3, 4, 5]] * 3, [20] * 3,
+                 sampling=SamplingParams(temperature=0.8, top_k=30,
+                                         top_p=0.9, seed=5))
+
+    calls = []
+    in_page = [False]
+    orig_decode, orig_to_host = eng.decode_page, eng._to_host
+
+    def spy_to_host(arr):
+        if in_page[0]:
+            calls[-1] += 1
+        return orig_to_host(arr)
+
+    def spy_decode(active, P):
+        calls.append(0)
+        in_page[0] = True
+        try:
+            return orig_decode(active, P)
+        finally:
+            in_page[0] = False
+
+    eng.decode_page, eng._to_host = spy_decode, spy_to_host
+    rep = sched.run(max_ticks=300)
+    assert rep["completed"] == 3
+    assert calls and all(c == 1 for c in calls), calls
+
+
+def test_seed_reproducible_across_batch_composition(dense_cfg):
+    """A fixed per-sequence seed yields the identical token stream whether
+    the sequence decodes alone, with co-resident neighbours, or in a
+    larger slot array — keys are fold_in(seed, t), never a function of
+    batch shape or slot."""
+    rng = np.random.default_rng(11)
+    target = list(rng.integers(2, dense_cfg.vocab_size, 7))
+    sp = SamplingParams(temperature=0.8, top_k=30, seed=123)
+
+    def stream(extra, max_active):
+        prompts = [target] + extra
+        sps = [sp] + [SamplingParams(temperature=1.1, seed=50 + i)
+                      for i in range(len(extra))]
+        cos, _ = _run(dense_cfg, prompts, [16] * len(prompts), sps,
+                      max_active=max_active)
+        return cos[0].generated
+
+    alone = stream([], 3)
+    crowded = stream([list(rng.integers(2, dense_cfg.vocab_size, 5)),
+                      list(rng.integers(2, dense_cfg.vocab_size, 9))], 3)
+    wider = stream([list(rng.integers(2, dense_cfg.vocab_size, 6))], 4)
+    assert alone == crowded == wider
+
+
+def test_seed_reproducible_across_migration(dense_cfg):
+    """YIELD -> MIGRATE -> COMBINE onto another node mid-stream: the
+    sampled continuation is identical to the uninterrupted run (state is
+    re-derived from seed + token count + token list at install)."""
+    rng = np.random.default_rng(13)
+    prompt = list(rng.integers(2, dense_cfg.vocab_size, 6))
+    sp = SamplingParams(temperature=0.9, top_p=0.9, seed=77)
+
+    baseline, _ = _run(dense_cfg, [prompt], [20], sp)
+    baseline = baseline[0].generated
+
+    engs = [NodeEngine(dense_cfg, node_id=i, max_active=3, max_len=128,
+                       page_size=8, seed=0) for i in range(2)]
+    sched = CoroutineScheduler(
+        engs, SchedulerConfig(page_size=8, migrate_imbalance=10 ** 9))
+    ids = sched.submit([prompt], [20], sampling=sp)
+    co = sched.cos[ids[0]]
+    sched._node_tick(0, engs[0])            # prefill + first page on node 0
+    assert 0 < len(co.generated) < 20
+    prim.yield_(co, engs[0])
+    prim.migrate(co, engs[0], engs[1])
+    prim.combine([co], engs[1])
+    for _ in range(100):
+        if co.done:
+            break
+        sched._node_tick(1, engs[1])        # finish on node 1
+    assert co.done
+    assert co.generated == baseline
+
+
+def test_stop_tokens_truncate_and_finish(dense_cfg, prompts):
+    sp = SamplingParams(temperature=0.9, top_k=50)
+    base, _ = _run(dense_cfg, prompts, [16] * 4, sp)
+    target = base[0].generated[4]
+    sps = [SamplingParams(temperature=0.9, top_k=50, stop=(target,))] + \
+        [sp] * 3
+    cos, _ = _run(dense_cfg, prompts, [16] * 4, sps)
+    idx = base[0].generated.index(target)
+    assert cos[0].generated == base[0].generated[: idx + 1]
+    assert cos[0].stopped and cos[0].finish_reason == "stop"
+    assert cos[0].done
+    # neighbours' streams unperturbed
+    assert [c.generated for c in cos[1:]] == \
+        [c.generated for c in base[1:]]
+
+
+def test_per_sequence_mixed_configs(dense_cfg, prompts):
+    """Greedy riders + different sampled configs share one megastep; the
+    greedy rider matches the all-greedy run exactly."""
+    greedy, _ = _run(dense_cfg, prompts, [10] * 4, None)
+    sps = [SamplingParams(),                      # greedy rider
+           default_sampling("llama3_2_1b", seed=1),
+           SamplingParams(temperature=1.3, min_p=0.1, seed=2),
+           SamplingParams(temperature=0.7, repetition_penalty=1.3, seed=3)]
+    mixed, _ = _run(dense_cfg, prompts, [10] * 4, sps)
+    assert mixed[0].generated == greedy[0].generated
+    assert mixed[1].generated != greedy[1].generated
+
+
+def test_prefill_batched_gather_two_transfers(dense_cfg):
+    """The prefill host-checkpoint is ONE batched blob transfer (plus the
+    logits/sampled-token transfer) — not n_seqs * n_leaves slices."""
+    eng = NodeEngine(dense_cfg, max_active=4, max_len=128, page_size=8,
+                     seed=0)
+    sched = CoroutineScheduler([eng], SchedulerConfig(page_size=8))
+    ids = sched.submit([[2, 3, 4], [5, 6, 7, 8], [9, 10]], [4] * 3)
+    before = eng.d2h_transfers
+    eng.prefill([sched.cos[i] for i in ids])
+    assert eng.d2h_transfers - before == 2
+    # host store holds the full prompt KV for every sequence
+    for i in ids:
+        co = sched.cos[i]
+        assert eng.host_store.has(co.seq_id)
+        rest = eng.host_store.restore(co.seq_id, eng.max_len)
+        assert all(v.shape[1] == eng.max_len for v in rest.values())

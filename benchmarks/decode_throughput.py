@@ -24,6 +24,7 @@ if __package__ in (None, ""):      # `python benchmarks/decode_throughput.py`
 
 from benchmarks.common import emit, write_json
 from repro.configs import reduced_config
+from repro.core.events import TokenBlockEvent
 from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
 from repro.runtime.engine import NodeEngine
 from repro.sampling import SamplingParams
@@ -50,6 +51,62 @@ def _throughput(cfg, *, fused: bool, max_active: int, page: int,
     return {"tokens_per_s": tok_s,
             "d2h_transfers": (eng.d2h_transfers - d2h0) // repeats,
             "decode_steps": (eng.decode_steps - steps0) // repeats}
+
+
+def _throughput_stream(cfg, *, max_active: int, page: int, max_out: int,
+                       repeats: int = 3) -> dict:
+    """Fused decode consumed through ``sched.stream()`` — measures the
+    per-record generator overhead of the stream-first surface vs the
+    blocking ``run()`` collection on the identical engine path."""
+    eng = NodeEngine(cfg, max_active=max_active, max_len=max_out + 32,
+                     page_size=page, seed=0, fused=True)
+    prompts = [[2, 3, 4, 5, 6, 7, 8, 9]] * max_active
+
+    def once():
+        sched = CoroutineScheduler([eng], SchedulerConfig(page_size=page))
+        sched.submit(prompts, [max_out] * max_active)
+        n_tok = 0
+        t0 = time.perf_counter()
+        for rec in sched.stream(max_ticks=100000, kinds=TokenBlockEvent):
+            n_tok += len(rec.tokens)
+        dt = time.perf_counter() - t0
+        assert n_tok == max_active * max_out
+        return n_tok / dt
+
+    once()                                  # warmup: compile everything
+    d2h0 = eng.d2h_transfers
+    tok_s = max(once() for _ in range(repeats))
+    return {"tokens_per_s": tok_s,
+            "d2h_transfers": (eng.d2h_transfers - d2h0) // repeats}
+
+
+def run_stream(tiny: bool = False) -> dict:
+    """Streaming-vs-blocking overhead tracking -> BENCH_stream_decode.json.
+
+    Both sides run the identical fused megastep; the delta is pure
+    host-side event-loop + record-emission cost, which must stay small
+    (the device program dominates on a real accelerator)."""
+    cfg = dataclasses.replace(reduced_config("llama3_2_1b"),
+                              dtype="float32", num_layers=1, d_model=64,
+                              d_ff=128, head_dim=16, vocab_size=256)
+    max_active, page, max_out = (2, 8, 12) if tiny else (8, 64, 96)
+    blocking = _throughput(cfg, fused=True, max_active=max_active,
+                           page=page, max_out=max_out)
+    stream = _throughput_stream(cfg, max_active=max_active, page=page,
+                                max_out=max_out)
+    overhead = blocking["tokens_per_s"] / stream["tokens_per_s"]
+    emit("decode.stream.tok_s", 1e6 / stream["tokens_per_s"],
+         f"{stream['tokens_per_s']:.0f} tok/s, "
+         f"{stream['d2h_transfers']} d2h")
+    emit("decode.stream.vs_blocking", 0.0, f"{overhead:.2f}x overhead")
+    payload = {
+        "config": {"arch": "llama3_2_1b(reduced)", "max_active": max_active,
+                   "page_size": page, "max_out": max_out, "tiny": tiny},
+        "blocking_run": blocking, "stream": stream,
+        "stream_overhead_vs_run": overhead,
+    }
+    write_json("stream_decode", payload)
+    return payload
 
 
 def run(tiny: bool = False) -> dict:
@@ -127,6 +184,8 @@ def main() -> None:
                     help="smoke-sized run for CI")
     ap.add_argument("--sampled", action="store_true",
                     help="run the sampled-decode variant too")
+    ap.add_argument("--stream", action="store_true",
+                    help="run the streaming-API variant too")
     args = ap.parse_args()
     p = run(tiny=args.tiny)
     print(f"fused {p['fused']['tokens_per_s']:.0f} tok/s vs looped "
@@ -138,6 +197,11 @@ def main() -> None:
               f"looped {s['looped']['tokens_per_s']:.0f} tok/s -> "
               f"{s['speedup']:.2f}x "
               f"({s['sampling_overhead_vs_greedy']:.2f}x vs greedy)")
+    if args.stream:
+        st = run_stream(tiny=args.tiny)
+        print(f"stream: {st['stream']['tokens_per_s']:.0f} tok/s vs "
+              f"blocking {st['blocking_run']['tokens_per_s']:.0f} tok/s -> "
+              f"{st['stream_overhead_vs_run']:.2f}x overhead")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,11 @@
 """End-to-end driver (deliverable b): serve a small MoE model with batched
 requests through the full coroutine runtime — two nodes, long-tail output
 lengths, eviction under memory pressure, migration, straggler PARTITION —
-and compare against disabling the coroutine features.  A final section
-decodes a sampled workload (per-sequence temperature/top-k/top-p/seed/stop
-through the fused megastep) and demonstrates seed reproducibility.
+and compare against disabling the coroutine features.  A sampled section
+decodes per-sequence temperature/top-k/top-p/seed/stop through the fused
+megastep and demonstrates seed reproducibility; an ONLINE section submits
+new requests while a batch is mid-flight on the live event loop
+(``sched.stream()``) and shows COMBINE absorbing them without restarting.
 
     PYTHONPATH=src python examples/batch_inference.py
 """
@@ -12,6 +14,7 @@ import time
 import numpy as np
 
 from repro.configs import default_sampling, reduced_config
+from repro.core.events import SeqFinishedEvent, TokenBlockEvent
 from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
 from repro.runtime.engine import NodeEngine
 from repro.sampling import SamplingParams
@@ -83,6 +86,36 @@ def run_sampled():
               f"first tokens={c.generated[:6]} finish={c.finish_reason}")
 
 
+def run_online():
+    """Online mode: requests arrive WHILE a batch is in flight.  The
+    event-driven loop is consumed through ``sched.stream()``; mid-stream
+    ``submit()`` drops new sequences into the pool and the next round's
+    REFILL event COMBINEs them into the running batch — no restart, no
+    separate online engine."""
+    cfg = reduced_config("phi3_5_moe")
+    rng = np.random.default_rng(3)
+    eng = NodeEngine(cfg, max_active=4, max_len=128, page_size=16, seed=0)
+    sched = CoroutineScheduler([eng], SchedulerConfig(page_size=16))
+    first = [list(rng.integers(2, cfg.vocab_size, 6)) for _ in range(4)]
+    ids = sched.submit(first, [24] * 4)
+    late_ids, finished_order = [], []
+    for rec in sched.stream(max_ticks=2000):
+        if isinstance(rec, SeqFinishedEvent):
+            finished_order.append(rec.seq_id)
+        if (not late_ids and isinstance(rec, TokenBlockEvent)
+                and rec.offset > 0):
+            # the batch is provably mid-flight: submit two more requests
+            late = [list(rng.integers(2, cfg.vocab_size, 5))
+                    for _ in range(2)]
+            late_ids = sched.submit(late, [10, 10])
+    assert late_ids and all(sched.cos[i].done for i in late_ids), \
+        "mid-stream submissions must complete on the live loop"
+    combines = eng.stats.counts["combine"]
+    print(f"[online       ] {len(ids)} initial + {len(late_ids)} mid-stream "
+          f"requests, all {sched.report()['completed']} completed; "
+          f"combine={combines} finish order={finished_order}")
+
+
 def main():
     rep, wall, engines = run(enable_coroutines=True)
     print(f"[coroutine ON ] BCT={wall:6.2f}s completed={rep['completed']}/"
@@ -100,6 +133,7 @@ def main():
           f"{sum(e.decode_steps for e in engines2)} decode steps "
           f"(refill keeps slots full; fewer wasted lockstep steps)")
     run_sampled()
+    run_online()
 
 
 if __name__ == "__main__":

@@ -3,14 +3,21 @@ compute model.
 
 - coroutine.py    SequenceCoroutine state machine (Fig. 4a)
 - primitives.py   YIELD / COMBINE / PARTITION / MIGRATE (§4.2)
+- backend.py      formal ExecutionBackend protocol (slot contract) +
+                  validate_backend
 - forward.py      Algorithm 1 — module-granularity forward with
                   intra-forward yields and MoE batch COMBINE
-- scheduler.py    Algorithm 2 — event-driven scheduling loop + §5.3
-                  dynamic sequence management
-- events.py       priority event queue
+- scheduler.py    Algorithm 2 — event-driven scheduling: SchedulerPolicy
+                  handler table draining the priority EventQueue, §5.3
+                  dynamic sequence management, stream-first results
+- events.py       priority event queue + typed stream records
 - plan.py         §5.4 — module roofline model, execution DAG,
                   critical-path configuration search
 """
+from repro.core.backend import ExecutionBackend, validate_backend  # noqa
 from repro.core.coroutine import Phase, SequenceCoroutine, Status  # noqa
+from repro.core.events import (EventKind, EventQueue, PrimitiveEvent,  # noqa
+                               SeqFinishedEvent, TokenBlockEvent)
 from repro.core.primitives import combine, migrate, partition, yield_  # noqa
-from repro.core.scheduler import CoroutineScheduler, SchedulerConfig  # noqa
+from repro.core.scheduler import (CoroutineScheduler, SchedulerConfig,  # noqa
+                                  SchedulerPolicy)

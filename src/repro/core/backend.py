@@ -1,0 +1,106 @@
+"""Formal execution-backend contract for the coroutine runtime.
+
+The scheduler is generic over "engines": anything that exposes the slot
+protocol below can host sequence coroutines.  Historically the contract
+was implicit (whatever ``CoroutineScheduler`` happened to call); this
+module makes it a ``typing.Protocol`` so
+
+* the real mini-engine (``runtime/engine.py``) and the virtual-clock
+  cluster simulator (``runtime/cluster.py``) *declare* conformance
+  (module-level ``validate_backend(cls)`` at import time), and
+* ``CoroutineScheduler`` *checks* conformance at construction
+  (``validate_backend(instance)``), so a backend missing one protocol
+  member fails loudly with the member's name instead of mid-batch with
+  an ``AttributeError``.
+
+Contract summary (see each engine for semantics):
+
+========================  ==================================================
+member                    role
+========================  ==================================================
+``node_id``               stable id the scheduler routes events by
+``max_active``            device slot count (refill / admission ceiling)
+``num_devices``           devices per node (PARTITION group sizing)
+``host_store``            paged host KV store — single source of truth
+``allocator``             two-page lazy page allocator
+``stats``                 ``PrimitiveStats`` (yield/combine/... accounting)
+``clock()``               node time (wall clock or virtual clock)
+``idle_tick()``           called when a tick finds no runnable work
+``acquire_slot(co)``      bind a coroutine to a free device slot (or None)
+``free_slot(co)``         release the coroutine's slot
+``extract_slot(co)``      device state -> host arrays (YIELD checkpoint)
+``install_slot(co, sl)``  host arrays -> device slot (COMBINE resume)
+``reconfigure_partition`` re-lower decode over a device group (PARTITION)
+``decode_page(act, P)``   decode up to P tokens for the active batch
+``sync_appends(act)``     flush freshly decoded KV to the host store
+``prefill(cos)``          prefill INIT coroutines, checkpoint, leave INACTIVE
+========================  ==================================================
+"""
+from __future__ import annotations
+
+from typing import (Any, Dict, List, Optional, Protocol, Sequence,
+                    runtime_checkable)
+
+PROTOCOL_METHODS = (
+    "clock", "idle_tick", "acquire_slot", "free_slot", "extract_slot",
+    "install_slot", "reconfigure_partition", "decode_page", "sync_appends",
+    "prefill",
+)
+PROTOCOL_ATTRS = (
+    "node_id", "max_active", "num_devices", "host_store", "allocator",
+    "stats",
+)
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """The slot protocol every engine must implement (see module doc)."""
+
+    node_id: int
+    max_active: int
+    num_devices: int
+    host_store: Any
+    allocator: Any
+    stats: Any
+
+    def clock(self) -> float: ...
+
+    def idle_tick(self) -> None: ...
+
+    def acquire_slot(self, co) -> Optional[int]: ...
+
+    def free_slot(self, co) -> None: ...
+
+    def extract_slot(self, co) -> Dict[str, Any]: ...
+
+    def install_slot(self, co, slices: Dict[str, Any]) -> None: ...
+
+    def reconfigure_partition(self, co, group: List[int]) -> None: ...
+
+    def decode_page(self, active: Sequence, P: int) -> None: ...
+
+    def sync_appends(self, active: Sequence) -> None: ...
+
+    def prefill(self, cos: Sequence) -> None: ...
+
+
+def validate_backend(backend):
+    """Check `backend` against the ExecutionBackend contract.
+
+    Accepts an instance (methods + data attributes checked — what the
+    scheduler does at construction) or a class (methods only: the data
+    members are created per-instance in ``__init__``, which is how the
+    engines declare conformance at import time).  Returns the argument so
+    it composes, raises ``TypeError`` naming every missing member.
+    """
+    is_cls = isinstance(backend, type)
+    name = backend.__name__ if is_cls else type(backend).__name__
+    missing = [m for m in PROTOCOL_METHODS
+               if not callable(getattr(backend, m, None))]
+    if not is_cls:
+        missing += [a for a in PROTOCOL_ATTRS if not hasattr(backend, a)]
+    if missing:
+        raise TypeError(
+            f"{name} does not implement ExecutionBackend: "
+            f"missing {', '.join(missing)}")
+    return backend

@@ -52,6 +52,17 @@ class SequenceCoroutine:
         default_factory=SamplingParams)
     stopped: bool = False
 
+    # logprobs: when requested, the fused megastep returns a second (P, B)
+    # f32 chosen-token logprob plane (and optional top-K alternatives)
+    # through the SAME single per-page transfer; values are log-softmax of
+    # the raw model logits (pre-sampling-pipeline), aligned 1:1 with
+    # `generated`.
+    logprobs: bool = False               # collect chosen-token logprobs
+    top_logprobs: int = 0                # also collect top-K alternatives
+    token_logprobs: List[float] = dataclasses.field(default_factory=list)
+    top_token_logprobs: List[List[tuple]] = dataclasses.field(
+        default_factory=list)            # per token: [(token_id, lp), ...]
+
     # placement (scheduler book-keeping; the paper's `migrate` target)
     node: int = 0
     slot: Optional[int] = None      # device slot when ACTIVE

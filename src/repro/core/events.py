@@ -1,9 +1,16 @@
-"""Event queue for the event-driven coroutine runtime (paper §3/§5).
+"""Event queue + typed result records for the event-driven runtime (§3/§5).
 
-Events are processed by the scheduler loop; GPUs always have work as long
-as any queue is non-empty.  The queue is priority-ordered so that
-correctness events (SYNC) precede utilization events (REFILL) which precede
-opportunistic ones (MIGRATE).
+Two event families live here:
+
+* **Scheduler events** (``EventKind`` / ``Event`` / ``EventQueue``) — the
+  *inputs* the ``CoroutineScheduler`` dispatches through its policy table.
+  The queue is priority-ordered so that correctness events (SYNC) precede
+  utilization events (REFILL) which precede opportunistic ones (MIGRATE);
+  GPUs always have work as long as any queue is non-empty.
+* **Runtime records** (``TokenBlockEvent`` / ``SeqFinishedEvent`` /
+  ``PrimitiveEvent``) — the *outputs* yielded by
+  ``CoroutineScheduler.stream()`` as pages complete, the stream-first
+  result surface ``run()`` and ``BatchMaster`` are built on.
 """
 from __future__ import annotations
 
@@ -11,7 +18,7 @@ import dataclasses
 import enum
 import heapq
 import itertools
-from typing import Any, Optional
+from typing import Any, List, Optional, Tuple
 
 
 class EventKind(enum.IntEnum):          # ordering = processing priority
@@ -57,3 +64,53 @@ class EventQueue:
 
     def __bool__(self):
         return bool(self._heap)
+
+
+# ---------------------------------------------------------------------------
+# runtime records — the stream-first result surface
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RuntimeRecord:
+    """Base of the typed records yielded by ``CoroutineScheduler.stream()``.
+
+    ``custom_id`` is filled in by ``BatchMaster`` when the record belongs
+    to a batch-API request (the scheduler itself only knows seq_ids)."""
+    seq_id: int
+    node: int
+
+
+@dataclasses.dataclass
+class TokenBlockEvent(RuntimeRecord):
+    """Tokens appended to one sequence by one decode page (or prefill).
+
+    ``offset`` is the index of ``tokens[0]`` within the sequence's full
+    generated stream — consumers reassemble exactly ``run()``'s output by
+    concatenating blocks in order, and an ``offset`` of 0 re-appearing
+    mid-stream signals a failure-recovery recompute (the earlier tokens
+    were re-generated and supersede what was streamed before)."""
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    offset: int = 0
+    logprobs: Optional[List[float]] = None
+    top_logprobs: Optional[List[List[Tuple[int, float]]]] = None
+    custom_id: Optional[str] = None
+
+
+@dataclasses.dataclass
+class SeqFinishedEvent(RuntimeRecord):
+    """A sequence completed and released its device + host pages."""
+    finish_reason: str = "length"       # "stop" | "length"
+    n_generated: int = 0
+    sct_s: Optional[float] = None       # sequence completion time (§2.1)
+    custom_id: Optional[str] = None
+
+
+@dataclasses.dataclass
+class PrimitiveEvent(RuntimeRecord):
+    """A coroutine primitive fired (yield/combine/partition/migrate — plus
+    'recompute' for the failure-recovery path that replays from the
+    prompt)."""
+    primitive: str = ""
+    detail: Any = None
+    custom_id: Optional[str] = None

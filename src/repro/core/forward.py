@@ -24,7 +24,10 @@ from repro.models import layers, moe as moe_lib, transformer as T
 from repro.models.api import MeshAxes, ModelConfig
 
 
-_PAGE_JIT_CAP = 8       # LRU cap on (steps, n_sub) page executables
+# LRU cap on (steps, n_sub, sampled, lp_k) page executables — sized so a
+# mixed workload (all pow2 chunk sizes x sampled x logprob variants) does
+# not thrash steady-state recompiles
+_PAGE_JIT_CAP = 16
 
 
 def _lru_get(cache: "OrderedDict", key, cap: int, make):
@@ -78,6 +81,7 @@ class ModuleRuntime:
         self._attn = jax.jit(self._attn_impl, static_argnames=("nsub",))
         self._ffn = jax.jit(self._ffn_impl)
         self._head = jax.jit(self._head_impl)
+        self._head_logits = jax.jit(self._head_logits_impl)
         self._page_cache: "OrderedDict[tuple, Any]" = OrderedDict()
 
     # --- jitted module bodies ------------------------------------------
@@ -111,12 +115,15 @@ class ModuleRuntime:
 
     # --- Algorithm 1 ------------------------------------------------------
     def forward_decode(self, tokens, cache, lengths, b_attn: int,
-                       on_yield: Optional[Callable] = None):
+                       on_yield: Optional[Callable] = None,
+                       want_logits: bool = False):
         """One decode step for the full active batch with B_attn
         sub-batching and COMBINE before each FFN/MoE.
 
         tokens (B,), cache pytree with leaves (L,B,S,...), lengths (B,).
-        Returns (next_tokens, new_cache)."""
+        Returns (next_tokens, new_cache) — or (logits, new_cache) with
+        ``want_logits`` (the looped-baseline logprob path picks the token
+        host-side)."""
         cfg = self.cfg
         B = tokens.shape[0]
         n_sub = max(B // max(b_attn, 1), 1)
@@ -146,12 +153,15 @@ class ModuleRuntime:
             if on_yield is not None:
                 on_yield("ffn", l, 0)
         cache = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
+        if want_logits:
+            return self._head_logits(h), cache
         nxt = self._head(h)
         return nxt, cache
 
     # --- fused decode page (one program per page) ----------------------
     def forward_decode_page(self, tokens, cache, lengths, remaining,
-                            b_attn: int, steps: int, sampling=None):
+                            b_attn: int, steps: int, sampling=None,
+                            lp_k=None):
         """Fused Algorithm-1 decode megastep: one jitted ``lax.scan`` over
         ``steps`` module-granularity decode steps.
 
@@ -169,15 +179,18 @@ class ModuleRuntime:
 
         ``sampling=(sp, state)`` swaps the head argmax for the sampling
         pipeline (see models.transformer.decode_page) and appends the
-        advanced per-slot state to the returned tuple."""
+        advanced per-slot state to the returned tuple.  ``lp_k`` (None |
+        0 | K) swaps the raw token rows for the packed logprob plane of
+        ``models.transformer.pack_logprob_block``."""
         B = int(tokens.shape[0])
         n_sub = max(B // max(b_attn, 1), 1)
-        key = (int(steps), n_sub, sampling is not None)
+        key = (int(steps), n_sub, sampling is not None, lp_k)
         fn = _lru_get(self._page_cache, key, _PAGE_JIT_CAP,
                       lambda: jax.jit(partial(self._page_impl,
                                               steps=int(steps),
                                               n_sub=n_sub,
-                                              sampled=sampling is not None),
+                                              sampled=sampling is not None,
+                                              lp_k=lp_k),
                                       donate_argnums=(0,)))
         if sampling is None:
             return fn(cache, tokens, lengths, remaining)
@@ -186,7 +199,7 @@ class ModuleRuntime:
 
     def _page_impl(self, cache, tokens, lengths, remaining, sp=None,
                    state=None, *, steps: int, n_sub: int,
-                   sampled: bool = False):
+                   sampled: bool = False, lp_k=None):
         from repro.sampling import sample_step
 
         cfg = self.cfg
@@ -215,16 +228,25 @@ class ModuleRuntime:
                                         (self.params["layers"], cache))
             return h, new_cache
 
+        def emit(tokens, logits):
+            return (tokens if lp_k is None
+                    else T.pack_logprob_block(tokens, logits, lp_k))
+
         if not sampled:
             def one_step(carry, _):
                 cache, tokens, lengths, remaining = carry
                 h, new_cache = model_step(cache, tokens, lengths)
-                nxt = self._head_impl(h)
+                if lp_k is None:
+                    nxt, logits = self._head_impl(h), None
+                else:
+                    logits = self._head_logits_impl(h)
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 live = remaining > 0
                 tokens = jnp.where(live, nxt, tokens)
                 lengths = lengths + live.astype(jnp.int32)
                 remaining = remaining - live.astype(jnp.int32)
-                return (new_cache, tokens, lengths, remaining), tokens
+                return (new_cache, tokens, lengths, remaining), \
+                    emit(tokens, logits)
 
             (cache, tokens, lengths, remaining), block = jax.lax.scan(
                 one_step, (cache, tokens, lengths, remaining), None,
@@ -239,7 +261,8 @@ class ModuleRuntime:
                                                       state, sp)
             tokens = jnp.where(live, nxt, tokens)
             lengths = lengths + live.astype(jnp.int32)
-            return (new_cache, tokens, lengths, remaining, state), tokens
+            return (new_cache, tokens, lengths, remaining, state), \
+                emit(tokens, logits)
 
         (cache, tokens, lengths, remaining, state), block = jax.lax.scan(
             one_step, (cache, tokens, lengths, remaining, state), None,

@@ -1,9 +1,10 @@
 """The four coroutine primitives: YIELD / COMBINE / PARTITION / MIGRATE.
 
-These are engine-agnostic: any object exposing the small slot protocol
-(extract_slot / install_slot / free_slot, .host_store, .allocator) can host
+These are engine-agnostic: any object implementing the formal
+``ExecutionBackend`` protocol (core/backend.py — extract_slot /
+install_slot / free_slot / ..., .host_store, .allocator, .stats) can host
 coroutines — the real mini-engine (runtime/engine.py) and the cluster
-simulator (runtime/cluster.py) both do.
+simulator (runtime/cluster.py) both declare conformance.
 
 Semantics (paper §4.2):
 * yield_  — suspend at a module boundary: checkpoint state to the host

@@ -1,40 +1,70 @@
 """Event-driven coroutine scheduler: Algorithm 2 + §5.3 dynamic sequence
-management.
+management, driven by a real event loop.
 
-The scheduler is generic over "engines" (one per node) implementing the
-slot protocol (see primitives.py).  Both the real mini-engine
+The scheduler is generic over execution backends implementing the formal
+slot protocol (``core/backend.py``).  Both the real mini-engine
 (runtime/engine.py — actually executes a JAX model on CPU) and the cluster
 simulator (runtime/cluster.py — virtual clocks from the §5.4 performance
 model) plug in here, so the scheduling logic benchmarked at 128 GPUs is the
 same code that decodes real tokens in the examples.
 
-Loop structure per decode *page* (P tokens, §5.3):
-  i.   Sync      — flush pending async KV appends (host = source of truth)
-  ii.  Eviction  — YIELD finished sequences, release pages
-  iii. Extension — extend page allocation or YIELD (most-progress-first)
-  iv.  Refill    — COMBINE waiting sequences into the active batch
+Event loop
+----------
+Every phase is a handler registered on a pluggable ``SchedulerPolicy``
+table keyed by ``EventKind``; ``step()`` seeds one round of per-node work
+and then drains ``self.queue`` in EventKind priority order
+(SYNC < SEQ_DONE < PAGE_BOUNDARY < MODULE_READY < REFILL < LONG_TAIL <
+MIGRATE < NODE_FAILURE).  Decode completion *enqueues* its follow-up
+phases instead of inline-calling them, so custom policies can reorder,
+drop or wrap any phase, and cluster-sim / real-engine runs share one code
+path.  Per decode *page* (P tokens, §5.3) the default policy dispatches:
+
+  REFILL(tick)   — pre-decode ON_REFILL_NODE, then enqueue MODULE_READY
+  MODULE_READY   — decode one page; enqueue SYNC/SEQ_DONE/PAGE_BOUNDARY/
+                   REFILL/LONG_TAIL for the node
+  SYNC           — flush pending async KV appends (host = source of truth)
+  SEQ_DONE       — YIELD finished sequences, release pages
+  PAGE_BOUNDARY  — extend page allocation or YIELD (most-progress-first)
+  REFILL         — COMBINE waiting sequences into the active batch
+  LONG_TAIL      — PARTITION stragglers over idle devices
+  MIGRATE        — rebalance suspended sequences across nodes (FIFO)
+  NODE_FAILURE   — §5.6 recovery: migrate checkpointed sequences to the
+                   least-loaded survivor, recompute the rest
+
+Stream-first results
+--------------------
+``stream()`` / ``events()`` yield typed records (``TokenBlockEvent`` /
+``SeqFinishedEvent`` / ``PrimitiveEvent``) as pages complete; ``run()`` is
+a thin wrapper that drains the stream and returns the BCT report.  The
+report carries ``status`` = ``"completed" | "exhausted"`` so callers can
+detect batches truncated by ``max_ticks``.
 
 Page-block contract (fused decode): ``engine.decode_page`` executes the
 whole page as one fused device program capped at ``min(P, max remaining)``
 steps (the on-device done mask absorbs mid-page finishes — that cap IS the
 early page exit) and applies the returned ``(P, max_active)`` token block
-to the coroutines before returning.  The page-boundary phases below
-therefore see fully updated coroutine state and ``sync_appends`` moves the
-block's KV to the host store with one batched gather per page.
-Callbacks:
-  ON_REFILL_NODE — trigger prefill when decode under-fills the node
-  ON_LONG_TAIL   — PARTITION stragglers over idle devices
-  MIGRATE        — rebalance suspended sequences across nodes (FIFO)
+to the coroutines before returning.  The page-boundary handlers therefore
+see fully updated coroutine state and ``sync_appends`` moves the block's
+KV to the host store with one batched gather per page.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
+import logging
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple, Type, Union)
 
 from repro.core import primitives as prim
+from repro.core.backend import validate_backend
 from repro.core.coroutine import Phase, SequenceCoroutine, Status
-from repro.core.events import EventKind, EventQueue
+from repro.core.events import (Event, EventKind, EventQueue, PrimitiveEvent,
+                               RuntimeRecord, SeqFinishedEvent,
+                               TokenBlockEvent)
 from repro.sampling.params import SamplingParams
+
+logger = logging.getLogger(__name__)
+
+_TICK = "tick"      # payload marking the round-seeding REFILL event
 
 
 @dataclasses.dataclass
@@ -47,43 +77,312 @@ class SchedulerConfig:
     max_partition_group: int = 8
 
 
+# ---------------------------------------------------------------------------
+# default policy handlers — each is handler(sched, event) and free to push
+# follow-up events; replace any of them via SchedulerPolicy to customize
+# ---------------------------------------------------------------------------
+
+
+def _refill_node(sched: "CoroutineScheduler", node: int, eng) -> None:
+    """COMBINE suspended sequences, then prefill INITs into free slots."""
+    waiting = sched.pending(node, Status.INACTIVE)
+    if waiting:
+        waiting.sort(key=lambda c: c.submitted_t)     # FIFO fairness
+        for co in prim.combine(waiting, eng):
+            sched.emit(PrimitiveEvent(co.seq_id, node, primitive="combine"))
+    inits = sched.pending(node, Status.INIT)
+    if inits:
+        free_slots = eng.max_active - len(sched.pending(node, Status.ACTIVE))
+        if free_slots > 0:
+            batch = inits[:free_slots]
+            eng.prefill(batch)          # leaves them INACTIVE on host
+            for co in batch:            # prefill emits the first token
+                sched.emit_token_block(co, 0)
+            for co in prim.combine(batch, eng):
+                sched.emit(PrimitiveEvent(co.seq_id, node,
+                                          primitive="combine",
+                                          detail="prefill"))
+
+
+def default_refill(sched: "CoroutineScheduler", ev: Event) -> None:
+    """ON_REFILL_NODE (Alg. 2 lines 7-11).  The round-seeding variant
+    (payload ``"tick"``) refills only when decode under-fills the node and
+    then enqueues the node's MODULE_READY decode work; the post-decode
+    variant refills unconditionally."""
+    eng = sched.engine(ev.node)
+    if eng is None:
+        return
+    if ev.payload == _TICK:
+        n_active = len(sched.pending(ev.node, Status.ACTIVE))
+        if n_active < sched.cfg.refill_threshold * eng.max_active:
+            _refill_node(sched, ev.node, eng)
+        sched.queue.push(EventKind.MODULE_READY, ev.node)
+    else:
+        _refill_node(sched, ev.node, eng)
+
+
+def default_module_ready(sched: "CoroutineScheduler", ev: Event) -> None:
+    """Decode one page on the node, then ENQUEUE the page-boundary phases
+    (sync -> evict -> extend -> refill -> longtail) instead of inline-
+    calling them — the queue's priority order sequences them."""
+    eng = sched.engine(ev.node)
+    if eng is None:
+        return
+    active = sched.pending(ev.node, Status.ACTIVE)
+    if not active:
+        eng.idle_tick()
+        return
+    before = {c.seq_id: len(c.generated) for c in active}
+    eng.decode_page(active, sched.cfg.page_size)
+    for co in active:
+        sched.emit_token_block(co, before[co.seq_id])
+    for kind in (EventKind.SYNC, EventKind.SEQ_DONE, EventKind.PAGE_BOUNDARY,
+                 EventKind.REFILL, EventKind.LONG_TAIL):
+        sched.queue.push(kind, ev.node)
+
+
+def default_sync(sched: "CoroutineScheduler", ev: Event) -> None:
+    """(i) Sync — async KV appends -> host store (§5.3 i)."""
+    eng = sched.engine(ev.node)
+    if eng is None:
+        return
+    active = sched.pending(ev.node, Status.ACTIVE)
+    if active:
+        eng.sync_appends(active)
+
+
+def default_seq_done(sched: "CoroutineScheduler", ev: Event) -> None:
+    """(ii) Eviction — finished sequences release device + host pages."""
+    eng = sched.engine(ev.node)
+    if eng is None:
+        return
+    for co in sched.pending(ev.node, Status.ACTIVE):
+        if co.remaining == 0:
+            eng.allocator.free_seq(co.seq_id)
+            eng.free_slot(co)
+            co.slot = None
+            eng.host_store.drop(co.seq_id)
+            co.finish()
+            sched.emit(SeqFinishedEvent(co.seq_id, ev.node,
+                                        finish_reason=co.finish_reason,
+                                        n_generated=len(co.generated),
+                                        sct_s=co.sct()))
+
+
+def default_page_boundary(sched: "CoroutineScheduler", ev: Event) -> None:
+    """(iii) Extension — two-page reservation; evict most-progress-first."""
+    eng = sched.engine(ev.node)
+    if eng is None:
+        return
+    active = sched.pending(ev.node, Status.ACTIVE)
+    lengths = {c.seq_id: c.length for c in active}
+    for victim_id in eng.allocator.ensure_two_pages(lengths):
+        co = sched.cos[victim_id]
+        if co.status == Status.ACTIVE:
+            prim.yield_(co, eng)
+            sched.log.append(f"yield(evict) seq={victim_id}")
+            sched.emit(PrimitiveEvent(victim_id, ev.node, primitive="yield",
+                                      detail="evict"))
+    for co in active:
+        if not co.done and co.status == Status.ACTIVE:
+            eng.allocator.alloc(co.seq_id, 1)
+
+
+def default_long_tail(sched: "CoroutineScheduler", ev: Event) -> None:
+    """ON_LONG_TAIL (Alg. 2 lines 12-14) -> PARTITION one straggler.
+
+    Only THIS node's live sequences count: a busy neighbour node must not
+    suppress PARTITION for a node already down to stragglers."""
+    eng = sched.engine(ev.node)
+    if eng is None:
+        return
+    cfg = sched.cfg
+    live = [c for c in sched.cos.values()
+            if c.node == ev.node and not c.done]
+    active = [c for c in live if c.status == Status.ACTIVE]
+    others = [c for c in live if c.status != Status.ACTIVE]
+    if (len(active) <= cfg.longtail_active and not others and active
+            and max(c.remaining for c in active) >= cfg.longtail_min_remaining
+            and not any(c.partition_group for c in active)):
+        # wait for yield (checkpoint), then PARTITION over idle devices
+        group = list(range(min(eng.num_devices, cfg.max_partition_group)))
+        for co in sorted(active, key=lambda c: -c.remaining):
+            prim.yield_(co, eng)
+            prim.partition(co, eng, group)
+            sched.log.append(f"partition seq={co.seq_id} group={len(group)}")
+            sched.emit(PrimitiveEvent(co.seq_id, ev.node,
+                                      primitive="partition", detail=group))
+            prim.combine([co], eng)
+            break
+
+
+def default_migrate(sched: "CoroutineScheduler", ev: Event) -> None:
+    """Opportunistic load balancing: move one suspended sequence from the
+    most- to the least-loaded node (FIFO)."""
+    if len(sched.engines) < 2:
+        return
+    nids = [e.node_id for e in sched.engines]
+    loads = {n: len(sched.pending(n, Status.INACTIVE))
+             + len(sched.pending(n, Status.INIT)) for n in nids}
+    hi = max(nids, key=loads.__getitem__)
+    lo = min(nids, key=loads.__getitem__)
+    if loads[hi] - loads[lo] >= sched.cfg.migrate_imbalance:
+        movable = (sched.pending(hi, Status.INACTIVE)
+                   or sched.pending(hi, Status.INIT))
+        if movable:
+            co = movable[0]
+            prim.migrate(co, sched.engine(hi), sched.engine(lo))
+            sched.log.append(f"migrate seq={co.seq_id} {hi}->{lo}")
+            sched.emit(PrimitiveEvent(co.seq_id, lo, primitive="migrate",
+                                      detail=(hi, lo)))
+
+
+def default_node_failure(sched: "CoroutineScheduler", ev: Event) -> None:
+    """§5.6 recovery: drop the failed engine from rotation; sequences with
+    a host checkpoint MIGRATE to the least-loaded survivor, everything
+    whose state died with the node recomputes from the prompt.  (The
+    cluster simulator's ``Cluster.fail_node`` layers the migrate-vs-
+    recompute *cost model* on top of the same decision.)"""
+    failed = sched.engine(ev.node)
+    if failed is None:
+        return
+    sched.engines = [e for e in sched.engines if e.node_id != ev.node]
+    sched.log.append(f"node_failure node={ev.node}")
+    if not sched.engines:
+        logger.warning("node %d failed with no survivors; %d sequences "
+                       "stranded", ev.node,
+                       sum(1 for c in sched.cos.values()
+                           if c.node == ev.node and not c.done))
+        return
+
+    def load(e):
+        return sum(1 for c in sched.cos.values()
+                   if c.node == e.node_id and not c.done)
+
+    for co in sched.cos.values():
+        if co.node != ev.node or co.done:
+            continue
+        dst = min(sched.engines, key=load)
+        co.partition_group = None       # the failed node's devices are gone
+        if (co.status in (Status.INACTIVE, Status.INIT)
+                and failed.host_store.has(co.seq_id)):
+            prim.migrate(co, failed, dst)
+            sched.emit(PrimitiveEvent(co.seq_id, dst.node_id,
+                                      primitive="migrate", detail="failover"))
+        else:
+            # device state (or an unsynced checkpoint) died with the node
+            if failed.host_store.has(co.seq_id):
+                failed.host_store.drop(co.seq_id)
+            co.generated.clear()
+            co.token_logprobs.clear()
+            co.top_token_logprobs.clear()
+            co.length = 0
+            co.slot = None
+            co.last_token = 0
+            co.stopped = False
+            co.phase = Phase.PREFILL
+            co.status = Status.INIT
+            co.node = dst.node_id
+            sched.emit(PrimitiveEvent(co.seq_id, dst.node_id,
+                                      primitive="recompute",
+                                      detail="failover"))
+
+
+Handler = Callable[["CoroutineScheduler", Event], None]
+
+
+@dataclasses.dataclass
+class SchedulerPolicy:
+    """Pluggable per-EventKind handler table (the §3 event-driven runtime).
+
+    Replace any field to customize one phase without forking the loop —
+    handlers receive ``(scheduler, event)`` and may push follow-up events
+    onto ``scheduler.queue`` and emit stream records via
+    ``scheduler.emit``."""
+    sync: Handler = default_sync
+    seq_done: Handler = default_seq_done
+    page_boundary: Handler = default_page_boundary
+    module_ready: Handler = default_module_ready
+    refill: Handler = default_refill
+    long_tail: Handler = default_long_tail
+    migrate: Handler = default_migrate
+    node_failure: Handler = default_node_failure
+
+    def table(self) -> Dict[EventKind, Handler]:
+        t = {EventKind.SYNC: self.sync,
+             EventKind.SEQ_DONE: self.seq_done,
+             EventKind.PAGE_BOUNDARY: self.page_boundary,
+             EventKind.MODULE_READY: self.module_ready,
+             EventKind.REFILL: self.refill,
+             EventKind.LONG_TAIL: self.long_tail,
+             EventKind.MIGRATE: self.migrate,
+             EventKind.NODE_FAILURE: self.node_failure}
+        missing = set(EventKind) - set(t)
+        assert not missing, f"EventKinds without a handler: {missing}"
+        return t
+
+
 class CoroutineScheduler:
-    def __init__(self, engines: Sequence, config: SchedulerConfig = None):
-        self.engines = list(engines)
+    def __init__(self, engines: Sequence, config: SchedulerConfig = None,
+                 policy: SchedulerPolicy = None):
+        self.engines = [validate_backend(e) for e in engines]
         self.cfg = config or SchedulerConfig()
+        self.policy = policy or SchedulerPolicy()
+        self._handlers = self.policy.table()
         self.queue = EventQueue()
         self.cos: Dict[int, SequenceCoroutine] = {}
         self._next_id = 0
         self.log: List[str] = []
+        self.ticks = 0
+        self._t0: Optional[float] = None
+        self._outbox: List[RuntimeRecord] = []
 
     # ------------------------------------------------------------------ API
     def submit(self, prompts: Sequence[Sequence[int]],
                max_out: Sequence[int],
                sampling: Union[None, SamplingParams,
-                               Sequence[SamplingParams]] = None
-               ) -> List[int]:
+                               Sequence[SamplingParams]] = None,
+               logprobs: Union[bool, Sequence[bool]] = False,
+               top_logprobs: Union[int, Sequence[int]] = 0) -> List[int]:
         """Distribute S_global evenly over nodes (Alg. 2 line 1).
 
         ``sampling``: None (greedy), one SamplingParams broadcast to every
         sequence, or one per sequence.  The params ride the coroutine, so
-        every later COMBINE/MIGRATE/PARTITION keeps them with it."""
+        every later COMBINE/MIGRATE/PARTITION keeps them with it.
+        ``logprobs`` / ``top_logprobs`` (scalar or per-sequence) request
+        the chosen-token logprob (and the top-K alternatives) for every
+        generated token — computed on device inside the fused megastep and
+        returned through the same single per-page transfer."""
+        n = len(prompts)
         if sampling is None or isinstance(sampling, SamplingParams):
-            sps = [sampling or SamplingParams()] * len(prompts)
+            sps = [sampling or SamplingParams()] * n
         else:
             sps = list(sampling)
-            if len(sps) != len(prompts):
+            if len(sps) != n:
                 raise ValueError(
-                    f"sampling list length {len(sps)} != "
-                    f"{len(prompts)} prompts")
+                    f"sampling list length {len(sps)} != {n} prompts")
+        lps = self._broadcast(logprobs, n, "logprobs")
+        tlps = self._broadcast(top_logprobs, n, "top_logprobs")
         ids = []
         for i, (p, mo, sp) in enumerate(zip(prompts, max_out, sps)):
             co = SequenceCoroutine(seq_id=self._next_id, prompt=list(p),
-                                   max_out=int(mo), sampling=sp)
+                                   max_out=int(mo), sampling=sp,
+                                   logprobs=bool(lps[i]) or int(tlps[i]) > 0,
+                                   top_logprobs=int(tlps[i]))
             co.node = self.engines[i % len(self.engines)].node_id
             self.cos[co.seq_id] = co
             ids.append(co.seq_id)
             self._next_id += 1
         return ids
+
+    @staticmethod
+    def _broadcast(val, n: int, name: str) -> List:
+        if isinstance(val, (bool, int)):
+            return [val] * n
+        vals = list(val)
+        if len(vals) != n:
+            raise ValueError(f"{name} list length {len(vals)} != {n}")
+        return vals
 
     def pending(self, node: int, status: Status) -> List[SequenceCoroutine]:
         return [c for c in self.cos.values()
@@ -92,130 +391,132 @@ class CoroutineScheduler:
     def all_done(self) -> bool:
         return all(c.done for c in self.cos.values())
 
+    def engine(self, node: int):
+        for e in self.engines:
+            if e.node_id == node:
+                return e
+        return None
+
+    # ------------------------------------------------------- stream records
+    def emit(self, rec: RuntimeRecord) -> None:
+        """Handlers publish stream records here; ``events()`` yields them
+        in emission order after each dispatched event."""
+        self._outbox.append(rec)
+
+    def emit_token_block(self, co: SequenceCoroutine, offset: int) -> None:
+        """Emit the tokens (and logprobs) ``co`` gained since ``offset``."""
+        if len(co.generated) <= offset:
+            return
+        lps = tops = None
+        if co.logprobs:
+            lps = [float(x) for x in co.token_logprobs[offset:]]
+            if co.top_logprobs:
+                tops = [list(row) for row in co.top_token_logprobs[offset:]]
+        self.emit(TokenBlockEvent(co.seq_id, co.node,
+                                  tokens=list(co.generated[offset:]),
+                                  offset=offset, logprobs=lps,
+                                  top_logprobs=tops))
+
+    # ------------------------------------------------------------ event core
+    def dispatch(self, ev: Event) -> List[RuntimeRecord]:
+        """Run the policy handler for one event; returns records emitted."""
+        handler = self._handlers.get(ev.kind)
+        if handler is None:
+            raise KeyError(f"no handler registered for {ev.kind!r}")
+        handler(self, ev)
+        out, self._outbox = self._outbox, []
+        return out
+
+    def _seed_round(self) -> None:
+        """Enqueue one round of per-node work: a round-seeding REFILL per
+        node (whose handler chains the node's MODULE_READY decode) and one
+        MIGRATE rebalance check."""
+        for e in list(self.engines):
+            self.queue.push(EventKind.REFILL, e.node_id, payload=_TICK)
+        if len(self.engines) > 1:
+            self.queue.push(EventKind.MIGRATE)
+
+    def _step_events(self) -> Iterator[RuntimeRecord]:
+        if self._t0 is None:
+            self._t0 = min((e.clock() for e in self.engines), default=0.0)
+        # Externally-pushed events (NODE_FAILURE from a health monitor,
+        # custom policy work) drain BEFORE this round's work is seeded —
+        # a failed node must not be refilled/decoded one last time just
+        # because NODE_FAILURE's dispatch priority trails the others.
+        while self.queue:
+            yield from self.dispatch(self.queue.pop())
+        self._seed_round()
+        while self.queue:
+            yield from self.dispatch(self.queue.pop())
+        self.ticks += 1
+
+    def step(self) -> List[RuntimeRecord]:
+        """One scheduler round: seed per-node work, then drain the event
+        queue in priority order.  Returns the records emitted."""
+        return list(self._step_events())
+
+    def events(self, max_ticks: int = 100000) -> Iterator[RuntimeRecord]:
+        """Core generator: run rounds until batch completion (or the tick
+        budget), yielding typed records as handlers emit them."""
+        start = self.ticks
+        while not self.all_done() and self.ticks - start < max_ticks:
+            yield from self._step_events()
+        if not self.all_done():
+            done = sum(c.done for c in self.cos.values())
+            logger.warning(
+                "scheduler exhausted max_ticks=%d with %d/%d sequences "
+                "unfinished — results are truncated", max_ticks,
+                len(self.cos) - done, len(self.cos))
+
+    def stream(self, max_ticks: int = 100000,
+               kinds: Union[None, Type[RuntimeRecord],
+                            Tuple[Type[RuntimeRecord], ...]] = None
+               ) -> Iterator[RuntimeRecord]:
+        """Stream-first result surface: yields ``TokenBlockEvent`` /
+        ``SeqFinishedEvent`` / ``PrimitiveEvent`` records as pages
+        complete.  ``kinds`` filters to the given record type(s).  New
+        sequences may be submitted while the stream is live; the next
+        round's REFILL picks them up."""
+        for rec in self.events(max_ticks):
+            if kinds is None or isinstance(rec, kinds):
+                yield rec
+
     # ------------------------------------------------------------- main loop
     def run(self, max_ticks: int = 100000) -> Dict:
-        """Run until batch completion; returns BCT stats."""
-        t0 = min(e.clock() for e in self.engines)
-        ticks = 0
-        while not self.all_done() and ticks < max_ticks:
-            for eng in self.engines:
-                self._node_tick(eng.node_id, eng)
-            self._global_balance()
-            ticks += 1
-        t1 = max(e.clock() for e in self.engines)
-        return self._report(t1 - t0, ticks)
+        """Run until batch completion; returns BCT stats.  Thin wrapper
+        over ``events()`` — identical token output to consuming
+        ``stream()`` yourself."""
+        self._t0 = None                  # fresh BCT window per run() call
+        for _ in self.events(max_ticks):
+            pass
+        return self.report()
 
-    # ------------------------------------------------------------ node logic
-    def _node_tick(self, node: int, eng):
-        active = [c for c in self.cos.values()
-                  if c.node == node and c.status == Status.ACTIVE]
-        # ON_REFILL_NODE: prefill when under-filled (Alg. 2 lines 7-11)
-        if len(active) < self.cfg.refill_threshold * eng.max_active:
-            self._refill(node, eng)
-            active = [c for c in self.cos.values()
-                      if c.node == node and c.status == Status.ACTIVE]
-        if not active:
-            eng.idle_tick()
-            return
-        # decode one page of tokens (P steps), then page-boundary phases
-        eng.decode_page(active, self.cfg.page_size)
-        self._page_boundary(node, eng, active)
-
-    def _page_boundary(self, node: int, eng, active):
-        # (i) Sync — async KV appends -> host store
-        eng.sync_appends(active)
-        # (ii) Eviction — finished sequences release device + host pages
-        for co in list(active):
-            if co.remaining == 0:
-                eng.allocator.free_seq(co.seq_id)
-                eng.free_slot(co)
-                co.slot = None
-                eng.host_store.drop(co.seq_id)
-                co.finish()
-        active = [c for c in active if not c.done]
-        # (iii) Extension — two-page reservation; evict most-progress-first
-        lengths = {c.seq_id: c.length for c in active}
-        for victim_id in eng.allocator.ensure_two_pages(lengths):
-            co = self.cos[victim_id]
-            if co.status == Status.ACTIVE:
-                prim.yield_(co, eng)
-                self.log.append(f"yield(evict) seq={victim_id}")
-        for co in active:
-            if not co.done and co.status == Status.ACTIVE:
-                eng.allocator.alloc(co.seq_id, 1)
-        # (iv) Refill — COMBINE suspended/prefilled sequences
-        self._refill(node, eng)
-        # ON_LONG_TAIL (Alg. 2 lines 12-14)
-        self._check_longtail(node, eng)
-
-    def _refill(self, node: int, eng):
-        waiting = self.pending(node, Status.INACTIVE)
-        if waiting:
-            waiting.sort(key=lambda c: c.submitted_t)     # FIFO fairness
-            prim.combine(waiting, eng)
-        # prefill new sequences if slots remain
-        inits = self.pending(node, Status.INIT)
-        if inits:
-            free_slots = eng.max_active - len(
-                [c for c in self.cos.values()
-                 if c.node == node and c.status == Status.ACTIVE])
-            if free_slots > 0:
-                batch = inits[: max(free_slots, 0)]
-                if batch:
-                    eng.prefill(batch)          # leaves them INACTIVE on host
-                    prim.combine(batch, eng)
-
-    def _check_longtail(self, node: int, eng):
-        # only THIS node's live sequences: a busy neighbour node must not
-        # suppress PARTITION for a node that is already down to stragglers
-        live = [c for c in self.cos.values()
-                if c.node == node and not c.done]
-        active = [c for c in live if c.status == Status.ACTIVE]
-        others = [c for c in live if c.status != Status.ACTIVE]
-        if (len(active) <= self.cfg.longtail_active and not others
-                and active
-                and max(c.remaining for c in active)
-                >= self.cfg.longtail_min_remaining
-                and not any(c.partition_group for c in active)):
-            # wait for yield (checkpoint), then PARTITION over idle devices
-            group = list(range(min(eng.num_devices,
-                                   self.cfg.max_partition_group)))
-            for co in sorted(active, key=lambda c: -c.remaining):
-                prim.yield_(co, eng)
-                prim.partition(co, eng, group)
-                self.log.append(
-                    f"partition seq={co.seq_id} group={len(group)}")
-                prim.combine([co], eng)
-                break
-
-    # ----------------------------------------------------------- migration
-    def _global_balance(self):
-        if len(self.engines) < 2:
-            return
-        nids = [e.node_id for e in self.engines]
-        loads = {n: len(self.pending(n, Status.INACTIVE))
-                 + len(self.pending(n, Status.INIT)) for n in nids}
-        hi = max(nids, key=loads.__getitem__)
-        lo = min(nids, key=loads.__getitem__)
-        if loads[hi] - loads[lo] >= self.cfg.migrate_imbalance:
-            movable = (self.pending(hi, Status.INACTIVE)
-                       or self.pending(hi, Status.INIT))
-            if movable:
-                co = movable[0]
-                by_id = {e.node_id: e for e in self.engines}
-                prim.migrate(co, by_id[hi], by_id[lo])
-                self.log.append(f"migrate seq={co.seq_id} {hi}->{lo}")
+    def _node_tick(self, node: int, eng=None) -> List[RuntimeRecord]:
+        """Compat shim (tests/tools): one node's full
+        refill -> decode -> page-boundary cycle through the event queue."""
+        self.queue.push(EventKind.REFILL, node, payload=_TICK)
+        recs: List[RuntimeRecord] = []
+        while self.queue:
+            recs += self.dispatch(self.queue.pop())
+        return recs
 
     # ------------------------------------------------------------- reporting
-    def _report(self, bct: float, ticks: int) -> Dict:
+    def report(self) -> Dict:
+        """Current batch report.  ``status`` is derived from live state —
+        "completed" only when every sequence is done, "exhausted" for any
+        truncation (max_ticks hit OR an abandoned stream), so a normal-
+        looking report can't hide unfinished sequences."""
+        t1 = max((e.clock() for e in self.engines), default=0.0)
+        t0 = self._t0 if self._t0 is not None else t1
         scts = [c.sct() for c in self.cos.values() if c.sct() is not None]
         stats = {}
         for i, e in enumerate(self.engines):
             stats[f"node{i}"] = {"counts": dict(e.stats.counts),
                                  "bytes": dict(e.stats.bytes_moved)}
         return {
-            "bct_s": bct,
-            "ticks": ticks,
+            "bct_s": t1 - t0,
+            "ticks": self.ticks,
+            "status": "completed" if self.all_done() else "exhausted",
             "completed": sum(c.done for c in self.cos.values()),
             "total": len(self.cos),
             "mean_sct_s": sum(scts) / len(scts) if scts else 0.0,

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -491,9 +491,45 @@ def decode_step_logits(cfg: ModelConfig, axes: MeshAxes, params, cache,
     return logits[:, 0, :], new_cache
 
 
+def pack_logprob_block(tokens, logits, lp_k: int):
+    """Pack one decode step's (tokens, raw logits) into a single f32 row
+    block so the whole page still moves in ONE device->host transfer.
+
+    Layout along the last axis (width 2 + 2*lp_k):
+      [0]                 tokens, int32 bitcast to f32 (exact round-trip)
+      [1]                 log-softmax(logits)[token] — chosen-token logprob
+      [2 : 2+K]           top-K logprob values (descending)
+      [2+K : 2+2K]        top-K token ids, int32 bitcast to f32
+    Unpacked host-side by ``unpack_logprob_block``."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    chosen = jnp.take_along_axis(lp, tokens[:, None].astype(jnp.int32),
+                                 axis=1)
+    parts = [jax.lax.bitcast_convert_type(tokens.astype(jnp.int32),
+                                          jnp.float32)[:, None], chosen]
+    if lp_k > 0:
+        vals, idx = jax.lax.top_k(lp, lp_k)
+        parts += [vals, jax.lax.bitcast_convert_type(idx, jnp.float32)]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def unpack_logprob_block(block_np):
+    """Inverse of ``pack_logprob_block`` for a (steps, B, 2+2K) host array.
+    Returns (tokens (steps,B) i32, chosen_lp (steps,B) f32,
+    topk_vals (steps,B,K) f32 | None, topk_ids (steps,B,K) i32 | None)."""
+    import numpy as np
+    K = (block_np.shape[-1] - 2) // 2
+    tokens = np.ascontiguousarray(block_np[..., 0]).view(np.int32)
+    chosen = block_np[..., 1]
+    if K == 0:
+        return tokens, chosen, None, None
+    vals = block_np[..., 2:2 + K]
+    ids = np.ascontiguousarray(block_np[..., 2 + K:]).view(np.int32)
+    return tokens, chosen, vals, ids
+
+
 def decode_page(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
                 lengths, remaining, steps: int, unroll=False,
-                sampling=None):
+                sampling=None, lp_k=None):
     """Fused decode megastep: `steps` decode steps in ONE program.
 
     A ``lax.scan`` over ``decode_step`` that keeps tokens/lengths/KV on
@@ -517,17 +553,36 @@ def decode_page(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
     never perturb a live slot's stream), and stop-token hits zero the
     slot's ``remaining`` on device.  Returns the same tuple plus the
     advanced ``state`` appended.
+
+    With ``lp_k`` set (0 = chosen-token only, K > 0 = also the top-K
+    alternatives) each step's output row is the packed
+    ``pack_logprob_block`` plane — (steps, B, 2+2K) f32 — built from the
+    RAW model logits, so logprobs ride the page's one transfer.
     """
     if sampling is None:
-        def body(carry, _):
-            cache, tokens, lengths, remaining = carry
-            nxt, cache = decode_step(cfg, axes, params, cache, tokens,
-                                     lengths, unroll=unroll)
-            live = remaining > 0
-            tokens = jnp.where(live, nxt, tokens)
-            lengths = lengths + live.astype(jnp.int32)
-            remaining = remaining - live.astype(jnp.int32)
-            return (cache, tokens, lengths, remaining), tokens
+        if lp_k is None:
+            def body(carry, _):
+                cache, tokens, lengths, remaining = carry
+                nxt, cache = decode_step(cfg, axes, params, cache, tokens,
+                                         lengths, unroll=unroll)
+                live = remaining > 0
+                tokens = jnp.where(live, nxt, tokens)
+                lengths = lengths + live.astype(jnp.int32)
+                remaining = remaining - live.astype(jnp.int32)
+                return (cache, tokens, lengths, remaining), tokens
+        else:
+            def body(carry, _):
+                cache, tokens, lengths, remaining = carry
+                logits, cache = decode_step_logits(cfg, axes, params, cache,
+                                                   tokens, lengths,
+                                                   unroll=unroll)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                live = remaining > 0
+                tokens = jnp.where(live, nxt, tokens)
+                lengths = lengths + live.astype(jnp.int32)
+                remaining = remaining - live.astype(jnp.int32)
+                return (cache, tokens, lengths, remaining), \
+                    pack_logprob_block(tokens, logits, lp_k)
 
         (cache, tokens, lengths, remaining), block = jax.lax.scan(
             body, (cache, tokens, lengths, remaining), None, length=steps)
@@ -544,7 +599,9 @@ def decode_page(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
                                                   sp)
         tokens = jnp.where(live, nxt, tokens)
         lengths = lengths + live.astype(jnp.int32)
-        return (cache, tokens, lengths, remaining, state), tokens
+        out = (tokens if lp_k is None
+               else pack_logprob_block(tokens, logits, lp_k))
+        return (cache, tokens, lengths, remaining, state), out
 
     (cache, tokens, lengths, remaining, state), block = jax.lax.scan(
         body, (cache, tokens, lengths, remaining, state), None, length=steps)

@@ -4,8 +4,13 @@ In-process implementation of the protocol shape (no HTTP server in this
 container): a BatchMaster per model-parallel group accepts batch
 submissions, over-subscribes its engines (dispatching far more requests
 than concurrent capacity so the runtime can COMBINE from a deep resident
-pool, §6.4 'Production deployment'), and returns results preserving input
-order.
+pool, §6.4 'Production deployment'), and serves results **stream-first**:
+``BatchMaster.stream(bid)`` yields the scheduler's typed records
+(``TokenBlockEvent`` / ``SeqFinishedEvent`` / ``PrimitiveEvent``,
+annotated with the request's ``custom_id``) as pages complete, while
+``BatchObject.results`` fills incrementally in completion order.
+``run()`` is re-implemented on top of the stream — it drains it, then
+re-orders the results to input order (the OpenAI batch contract).
 """
 from __future__ import annotations
 
@@ -13,8 +18,9 @@ import dataclasses
 import json
 import time
 import uuid
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Iterator, List, Optional, Sequence
 
+from repro.core.events import RuntimeRecord, SeqFinishedEvent
 from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
 from repro.sampling import SamplingParams
 
@@ -27,6 +33,8 @@ class BatchRequest:
     max_tokens: int = 128
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)
+    logprobs: bool = False          # return chosen-token logprobs
+    top_logprobs: int = 0           # also return the top-K alternatives
 
     @classmethod
     def from_json(cls, line: str) -> "BatchRequest":
@@ -45,7 +53,9 @@ class BatchRequest:
         return cls(custom_id=d.get("custom_id", str(uuid.uuid4())),
                    prompt=body["prompt"],
                    max_tokens=int(body.get("max_tokens", 128)),
-                   sampling=sp)
+                   sampling=sp,
+                   logprobs=bool(body.get("logprobs", False)),
+                   top_logprobs=int(body.get("top_logprobs", 0)))
 
 
 @dataclasses.dataclass
@@ -61,7 +71,7 @@ class BatchObject:
 
 class BatchMaster:
     """Master node: accepts batches, partitions sequences across workers via
-    the coroutine scheduler, streams results to an output buffer."""
+    the coroutine scheduler, streams results as they complete."""
 
     def __init__(self, engines: Sequence, sched_cfg: SchedulerConfig = None,
                  oversubscribe: float = 4.0):
@@ -69,6 +79,12 @@ class BatchMaster:
         self.sched_cfg = sched_cfg or SchedulerConfig()
         self.oversubscribe = oversubscribe
         self.batches: Dict[str, BatchObject] = {}
+        # per-batch working state, dropped at _finalize (only the
+        # BatchObject survives a finished batch)
+        self._requests: Dict[str, List[BatchRequest]] = {}
+        self._scheds: Dict[str, CoroutineScheduler] = {}
+        self._ids: Dict[str, List[int]] = {}
+        self._rows: Dict[str, Dict[int, Dict[str, Any]]] = {}
 
     def submit(self, requests: Sequence[BatchRequest]) -> str:
         bid = f"batch_{uuid.uuid4().hex[:12]}"
@@ -76,30 +92,102 @@ class BatchMaster:
         bo.request_counts["total"] = len(requests)
         bo.status = "in_progress"
         self.batches[bid] = bo
-        self._requests = list(requests)
+        self._requests[bid] = list(requests)
         return bid
 
-    def run(self, bid: str, max_ticks: int = 100000) -> BatchObject:
+    # ------------------------------------------------------------- streaming
+    def stream(self, bid: str,
+               max_ticks: int = 100000) -> Iterator[RuntimeRecord]:
+        """Elastic result surface: yield runtime records as pages complete.
+
+        Each record carries the owning request's ``custom_id``; on every
+        ``SeqFinishedEvent`` the request's result row is appended to
+        ``BatchObject.results`` (completion order) so pollers see partial
+        output while the batch is in flight.  Consume fully (or call
+        ``run()``) to finalize the batch object.  Abandoning the stream
+        mid-flight leaves the batch ``in_progress``; calling again starts
+        a fresh pass (results and counts reset — sequences re-decode).
+        A finalized batch cannot be streamed again (use ``retrieve()``)."""
         bo = self.batches[bid]
+        if bid not in self._requests:
+            raise ValueError(
+                f"batch {bid} is already finalized; use retrieve()")
+        # fresh pass: discard partial state from any abandoned stream
+        bo.results = []
+        bo.request_counts["completed"] = 0
+        bo.request_counts["failed"] = 0
+        reqs = self._requests[bid]
         sched = CoroutineScheduler(self.engines, self.sched_cfg)
-        ids = sched.submit([r.prompt for r in self._requests],
-                           [r.max_tokens for r in self._requests],
-                           sampling=[r.sampling for r in self._requests])
-        rep = sched.run(max_ticks=max_ticks)
-        for req, sid in zip(self._requests, ids):
-            co = sched.cos[sid]
-            bo.results.append({
-                "custom_id": req.custom_id,
-                "response": {"tokens": list(co.generated),
-                             "finish_reason": (co.finish_reason if co.done
-                                               else "incomplete")},
-                "status_code": 200 if co.done else 504,
-            })
-            bo.request_counts["completed" if co.done else "failed"] += 1
+        self._scheds[bid] = sched
+        ids = sched.submit([r.prompt for r in reqs],
+                           [r.max_tokens for r in reqs],
+                           sampling=[r.sampling for r in reqs],
+                           logprobs=[r.logprobs for r in reqs],
+                           top_logprobs=[r.top_logprobs for r in reqs])
+        self._ids[bid] = ids
+        self._rows[bid] = {}
+        by_seq = {sid: r for sid, r in zip(ids, reqs)}
+        for rec in sched.events(max_ticks):
+            req = by_seq.get(rec.seq_id)
+            if req is not None:
+                rec.custom_id = req.custom_id
+                if isinstance(rec, SeqFinishedEvent):
+                    row = self._result_row(req, sched.cos[rec.seq_id])
+                    self._rows[bid][rec.seq_id] = row
+                    bo.results.append(row)
+                    bo.request_counts["completed"] += 1
+            yield rec
+        self._finalize(bid)
+
+    # ------------------------------------------------------------- blocking
+    def run(self, bid: str, max_ticks: int = 100000) -> BatchObject:
+        """Run to completion; results preserve input order (OpenAI batch
+        contract).  Thin wrapper that drains ``stream()``; idempotent on
+        an already-finalized batch."""
+        if bid not in self._requests:           # already finalized
+            return self.batches[bid]
+        for _ in self.stream(bid, max_ticks=max_ticks):
+            pass
+        return self.batches[bid]
+
+    def _finalize(self, bid: str) -> None:
+        """Re-order results to input order (rows keyed by seq_id, so
+        duplicate custom_ids cannot collapse), fill 504 rows for anything
+        the tick budget cut off, and drop the per-batch working state —
+        a long-lived master must not retain one scheduler per batch."""
+        bo = self.batches[bid]
+        sched = self._scheds.pop(bid)
+        reqs = self._requests.pop(bid)
+        ids = self._ids.pop(bid)
+        rows = self._rows.pop(bid)
+        rep = sched.report()
+        bo.results = []
+        for req, sid in zip(reqs, ids):
+            row = rows.get(sid)
+            if row is None:             # exhausted before finishing
+                row = self._result_row(req, sched.cos[sid])
+                bo.request_counts["failed"] += 1
+            bo.results.append(row)
         bo.status = "completed"
         bo.completed_at = time.time()
         bo.bct_s = rep["bct_s"]
-        return bo
+        bo.scheduler_status = rep["status"]
+
+    @staticmethod
+    def _result_row(req: BatchRequest, co) -> Dict[str, Any]:
+        resp: Dict[str, Any] = {
+            "tokens": list(co.generated),
+            "finish_reason": co.finish_reason if co.done else "incomplete",
+        }
+        if req.logprobs or req.top_logprobs > 0:
+            resp["logprobs"] = {
+                "token_logprobs": [float(x) for x in co.token_logprobs]}
+            if req.top_logprobs > 0:
+                resp["logprobs"]["top_logprobs"] = [
+                    [[int(t), float(lp)] for t, lp in row]
+                    for row in co.top_token_logprobs]
+        return {"custom_id": req.custom_id, "response": resp,
+                "status_code": 200 if co.done else 504}
 
     def retrieve(self, bid: str) -> BatchObject:
         return self.batches[bid]

@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import plan as plan_lib
+from repro.core.backend import validate_backend
 from repro.core.coroutine import Phase, SequenceCoroutine, Status
 from repro.core.primitives import PrimitiveStats
 from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
@@ -120,12 +121,13 @@ class SimEngine:
         self.busy_s += dt
         for c in active:
             n = min(steps, c.remaining)
+            start = len(c.generated)
             toks, hit = c.sampling.truncate_at_stop(
-                [self._sim_token(c, len(c.generated) + t)
-                 for t in range(n)])
+                [self._sim_token(c, start + t) for t in range(n)])
             c.stopped = c.stopped or hit
             c.generated.extend(toks)
             c.length += len(toks)
+            self._sim_append_logprobs(c, start, toks)
         # host-store metadata so migrate/refill see real lengths
         for c in active:
             if not self.host_store.has(c.seq_id):
@@ -146,6 +148,30 @@ class SimEngine:
             & 0xFFFFFFFF
         return 7 + (h >> 16) % 89
 
+    @staticmethod
+    def _sim_logprob(co: SequenceCoroutine, idx: int) -> float:
+        """Deterministic pseudo-logprob for the token at generated-index
+        ``idx`` — like ``_sim_token``, a pure function of per-sequence
+        state so streaming, replay and recovery all agree."""
+        h = (co.sampling.effective_seed(co.seq_id) * 40503
+             + idx * 2654435761) & 0xFFFFFFFF
+        return -0.01 - (h >> 16) / 65536.0 * 8.0
+
+    @classmethod
+    def _sim_append_logprobs(cls, co: SequenceCoroutine, start: int,
+                             toks) -> None:
+        """Honor the logprobs surface in simulation: the virtual decode
+        emits the same record shape as the real megastep's packed plane."""
+        if not co.logprobs:
+            return
+        for t, tok in enumerate(toks):
+            lp = cls._sim_logprob(co, start + t)
+            co.token_logprobs.append(lp)
+            if co.top_logprobs:
+                co.top_token_logprobs.append(
+                    [(int(tok) + j, lp - 0.5 * j)
+                     for j in range(co.top_logprobs)])
+
     def sync_appends(self, active):
         # async appends overlap with decode; only the page-boundary barrier
         # (5-10 ms / 64 tokens cross-node sync, Table 2) costs time
@@ -165,6 +191,7 @@ class SimEngine:
             co.length = co.prompt_len
             co.last_token = self._sim_token(co, 0)
             co.generated.append(co.last_token)
+            self._sim_append_logprobs(co, 0, [co.last_token])
             if co.last_token in co.sampling.stop:
                 co.stopped = True
             co.phase = Phase.DECODING
@@ -172,6 +199,11 @@ class SimEngine:
 
     def utilization(self) -> float:
         return self.busy_s / max(self.vclock, 1e-9)
+
+
+# SimEngine declares conformance to the same formal backend contract as
+# the real NodeEngine — one scheduler code path drives both.
+validate_backend(SimEngine)
 
 
 # ---------------------------------------------------------------------------

@@ -3,9 +3,16 @@
 One NodeEngine = one node's GPU pool.  It owns a dense device decode cache
 with `max_active` sequence slots, a paged host store (single source of
 truth, §5.2), a page allocator (two-page lazy allocation), and jitted
-prefill/decode steps.  The CoroutineScheduler drives it exclusively through
-the slot protocol, so the exact same scheduling code also drives the
-cluster simulator.
+prefill/decode steps.  The CoroutineScheduler drives it exclusively
+through the formal ExecutionBackend slot protocol (core/backend.py —
+conformance declared below), so the exact same scheduling code also
+drives the cluster simulator.
+
+Logprobs: when any active coroutine requests them, the megastep emits the
+packed ``(P, B, 2+2K)`` plane of ``models.transformer.pack_logprob_block``
+(chosen-token logprob + top-K alternatives from the RAW model logits)
+instead of the bare token block — the page still crosses in ONE
+device→host transfer; ``_apply_block`` unpacks it host-side.
 
 Fused decode megastep (default)
 -------------------------------
@@ -49,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import sampling as smp
+from repro.core.backend import validate_backend
 from repro.core.coroutine import Phase, SequenceCoroutine, Status
 from repro.core.forward import ModuleRuntime, _lru_get
 from repro.core.primitives import PrimitiveStats
@@ -58,11 +66,31 @@ from repro.models import transformer as T
 from repro.models.api import MeshAxes, ModelConfig
 
 _PREFILL_JIT_CAP = 8    # LRU cap on (B, S)-bucketed prefill executables
-_MEGASTEP_JIT_CAP = 16  # LRU cap on (scan-length, sampled)-keyed megasteps
+# LRU cap on (scan-length, sampled, lp_k)-keyed megasteps — sized for all
+# pow2 chunk sizes of a page x {greedy, sampled} x {no-lp, lp} variants
+# coexisting without steady-state eviction/re-jit churn
+_MEGASTEP_JIT_CAP = 32
 
 
 def _pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
+
+
+def _np_top_k_idx(x: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the k largest entries, ties broken by LOWEST index —
+    matching ``jax.lax.top_k`` so host-side (prefill / looped-baseline)
+    top-logprobs agree with the device plane.  (``argsort()[::-1]`` would
+    break ties by highest index.)"""
+    return np.argsort(-x, kind="stable")[:k]
+
+
+def _np_log_softmax(x: np.ndarray) -> np.ndarray:
+    """Host-side log-softmax over the last axis (prefill / looped-baseline
+    logprobs; the fused path computes this on device)."""
+    x = np.asarray(x, np.float32)
+    m = x.max(axis=-1, keepdims=True)
+    e = np.exp(x - m)
+    return (x - m) - np.log(e.sum(axis=-1, keepdims=True))
 
 
 class NodeEngine:
@@ -112,6 +140,7 @@ class NodeEngine:
         self._decode = jax.jit(
             lambda p, c, t, l: T.decode_step(cfg, self.axes, p, c, t, l),
             donate_argnums=(1,))
+        self._decode_logits = None      # lazy: looped-baseline logprob path
         self._megastep_cache: "OrderedDict[tuple, object]" = OrderedDict()
         self._prefill_cache: "OrderedDict[tuple, object]" = OrderedDict()
         self.module_rt = (ModuleRuntime(cfg, self.axes, self.params)
@@ -233,8 +262,10 @@ class NodeEngine:
         if steps <= 0:
             return
         sampled = any(not c.sampling.is_greedy_default for c in active)
+        want_lp = [c for c in active if c.logprobs]
+        lp_k = max(c.top_logprobs for c in want_lp) if want_lp else None
         if not self.fused and not sampled:
-            return self._decode_page_looped(active, P)
+            return self._decode_page_looped(active, P, lp_k)
         # exact step count via pow2 decomposition (40 -> 32+8): each chunk
         # is a cached scan executable (≤ log2(P) distinct sizes), chunks
         # chain on device, blocks concatenate on device -> no masked tail
@@ -258,9 +289,9 @@ class NodeEngine:
                 out = self.module_rt.forward_decode_page(
                     self.tokens, self.cache, self.lengths, rem_j,
                     self.b_attn, chunk,
-                    sampling=(sp, state) if sampled else None)
+                    sampling=(sp, state) if sampled else None, lp_k=lp_k)
             else:
-                mega = self._get_megastep(chunk, sampled)
+                mega = self._get_megastep(chunk, sampled, lp_k)
                 args = (self.params, self.cache, self.tokens, self.lengths,
                         rem_j) + ((sp, state) if sampled else ())
                 out = mega(*args)
@@ -283,52 +314,97 @@ class NodeEngine:
 
     def _apply_block(self, active: Sequence[SequenceCoroutine], block_np,
                      steps: int):
-        """Apply a (steps, max_active) token block to coroutine state,
+        """Apply a (steps, max_active) token block — or the packed
+        (steps, max_active, 2+2K) logprob plane — to coroutine state,
         truncating at each sequence's first stop-token hit (the stop token
         is emitted, then the sequence halts — mirroring the on-device
         remaining-zeroing)."""
+        lp_np = topv = topi = None
+        if block_np.ndim == 3:
+            toks_np, lp_np, topv, topi = T.unpack_logprob_block(block_np)
+        else:
+            toks_np = block_np
         for co in active:
             n = min(steps, co.remaining)
             if n <= 0:
                 continue
-            toks, hit = co.sampling.truncate_at_stop(block_np[:n, co.slot])
+            toks, hit = co.sampling.truncate_at_stop(toks_np[:n, co.slot])
             co.stopped = co.stopped or hit
             co.generated.extend(toks)
             co.last_token = toks[-1]
             co.length += len(toks)
+            if co.logprobs and lp_np is not None:
+                self._append_logprobs(
+                    co, [float(x) for x in lp_np[:len(toks), co.slot]],
+                    None if topv is None else topv[:len(toks), co.slot],
+                    None if topi is None else topi[:len(toks), co.slot])
 
-    def _get_megastep(self, steps: int, sampled: bool = False):
+    @staticmethod
+    def _append_logprobs(co: SequenceCoroutine, chosen, topv, topi):
+        """Append one block of chosen-token logprobs (and the requested
+        top-K alternatives) aligned with the tokens just applied."""
+        co.token_logprobs.extend(chosen)
+        if co.top_logprobs and topv is not None:
+            k = co.top_logprobs
+            for t in range(len(chosen)):
+                co.top_token_logprobs.append(
+                    [(int(topi[t][j]), float(topv[t][j])) for j in range(k)])
+
+    def _get_megastep(self, steps: int, sampled: bool = False, lp_k=None):
         def make():
             if sampled:
                 def _mega(params, cache, tokens, lengths, remaining, sp,
                           state):
                     return T.decode_page(self.cfg, self.axes, params, cache,
                                          tokens, lengths, remaining, steps,
-                                         sampling=(sp, state))
+                                         sampling=(sp, state), lp_k=lp_k)
             else:
                 def _mega(params, cache, tokens, lengths, remaining):
                     return T.decode_page(self.cfg, self.axes, params, cache,
-                                         tokens, lengths, remaining, steps)
+                                         tokens, lengths, remaining, steps,
+                                         lp_k=lp_k)
             return jax.jit(_mega, donate_argnums=(1,))
-        return _lru_get(self._megastep_cache, (steps, sampled),
+        return _lru_get(self._megastep_cache, (steps, sampled, lp_k),
                         _MEGASTEP_JIT_CAP, make)
 
     def _decode_page_looped(self, active: Sequence[SequenceCoroutine],
-                            P: int):
+                            P: int, lp_k=None):
         """Seed per-token loop: one jitted step, one host round-trip and
         Python bookkeeping per token.  Kept as the measured baseline for
-        benchmarks/decode_throughput.py (fused=False)."""
+        benchmarks/decode_throughput.py (fused=False).  With ``lp_k`` the
+        raw logits cross per token instead and the logprobs are computed
+        host-side (baseline only; the fused path packs them on device)."""
         by_slot = {c.slot: c for c in active}
         steps = min(P, max(c.remaining for c in active))
+        if (lp_k is not None and self.module_rt is None
+                and self._decode_logits is None):
+            self._decode_logits = jax.jit(
+                lambda p, c, t, l: T.decode_step_logits(
+                    self.cfg, self.axes, p, c, t, l), donate_argnums=(1,))
         for _ in range(steps):
-            if self.module_rt is not None:
+            lp_np = None
+            if lp_k is not None:
+                if self.module_rt is not None:
+                    logits, self.cache = self.module_rt.forward_decode(
+                        self.tokens, self.cache, self.lengths, self.b_attn,
+                        want_logits=True)
+                else:
+                    logits, self.cache = self._decode_logits(
+                        self.params, self.cache, self.tokens, self.lengths)
+                logits_np = self._to_host(logits)
+                lp_np = _np_log_softmax(logits_np)
+                nxt_np = np.argmax(logits_np, axis=-1).astype(np.int32)
+            elif self.module_rt is not None:
                 nxt, self.cache = self.module_rt.forward_decode(
                     self.tokens, self.cache, self.lengths, self.b_attn)
+                nxt_np = None
             else:
                 nxt, self.cache = self._decode(self.params, self.cache,
                                                self.tokens, self.lengths)
+                nxt_np = None
             self.decode_steps += 1
-            nxt_np = self._to_host(nxt)
+            if nxt_np is None:
+                nxt_np = self._to_host(nxt)
             upd_tok, upd_len = [], []
             for s, co in by_slot.items():
                 if co.remaining > 0:
@@ -336,6 +412,14 @@ class NodeEngine:
                     co.generated.append(tok)
                     co.last_token = tok
                     co.length += 1
+                    if co.logprobs and lp_np is not None:
+                        topv = topi = None
+                        if co.top_logprobs:
+                            topi = [_np_top_k_idx(lp_np[s],
+                                                  co.top_logprobs)]
+                            topv = [lp_np[s][topi[0]]]
+                        self._append_logprobs(
+                            co, [float(lp_np[s, tok])], topv, topi)
                     upd_tok.append((s, tok))
                     upd_len.append((s, co.length))
             if upd_tok:
@@ -455,6 +539,7 @@ class NodeEngine:
         # first generated token: device-sampled when any sequence asks for
         # it (key = fold_in(PRNGKey(seed), 0), counts over the prompt);
         # all-greedy batches keep the host argmax
+        logits_np = None
         if any(not c.sampling.is_greedy_default for c in cos):
             sp = smp.pack_params([c.sampling for c in cos],
                                  [c.seq_id for c in cos])
@@ -471,6 +556,11 @@ class NodeEngine:
         else:
             logits_np = self._to_host(logits)
             first = np.argmax(logits_np[:n, 0], axis=-1)
+        lp_np = None
+        if any(c.logprobs for c in cos):
+            if logits_np is None:       # sampled batch: logits still on dev
+                logits_np = self._to_host(logits)
+            lp_np = _np_log_softmax(logits_np[:n, 0])
         for i, co in enumerate(cos):
             pl = co.prompt_len
             slices = {}
@@ -480,6 +570,13 @@ class NodeEngine:
             self.host_store.checkpoint(co.seq_id, slices, pl)
             co.last_token = int(first[i])
             co.generated.append(co.last_token)
+            if co.logprobs and lp_np is not None:
+                topv = topi = None
+                if co.top_logprobs:
+                    topi = [_np_top_k_idx(lp_np[i], co.top_logprobs)]
+                    topv = [lp_np[i][topi[0]]]
+                self._append_logprobs(
+                    co, [float(lp_np[i, co.last_token])], topv, topi)
             if co.last_token in co.sampling.stop:
                 co.stopped = True
             co.length = pl
@@ -487,3 +584,9 @@ class NodeEngine:
             co.status = Status.INACTIVE
             self.synced_len[co.seq_id] = pl
             self.prefill_tokens += pl
+
+
+# NodeEngine declares conformance to the formal backend contract; the
+# scheduler re-validates instances (including the data members created in
+# __init__) at construction.
+validate_backend(NodeEngine)

@@ -31,6 +31,26 @@ def get_abstract_mesh():
     return m if m is not None else _EmptyMesh()
 
 
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with the ``axis_types`` kwarg bridged.
+
+    New JAX spells non-explicit axes ``axis_types=(AxisType.Auto, ...)``;
+    0.4.x predates ``jax.sharding.AxisType`` entirely (every axis is
+    implicitly auto) and raises on the kwarg.  Falls back to
+    ``jax.sharding.Mesh`` over a reshaped ``jax.devices()`` grid for
+    builds older than ``jax.make_mesh`` itself."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    mk = getattr(jax, "make_mesh", None)
+    if mk is None:
+        import numpy as np
+        devs = np.asarray(jax.devices()[: int(np.prod(axis_shapes))])
+        return jax.sharding.Mesh(devs.reshape(axis_shapes), axis_names)
+    if axis_type is None:
+        return mk(axis_shapes, axis_names)
+    return mk(axis_shapes, axis_names,
+              axis_types=(axis_type.Auto,) * len(axis_names))
+
+
 def use_mesh(mesh):
     """Context manager activating `mesh` for closed-over jitted code."""
     fn = getattr(jax, "set_mesh", None)

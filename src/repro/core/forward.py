@@ -161,7 +161,7 @@ class ModuleRuntime:
     # --- fused decode page (one program per page) ----------------------
     def forward_decode_page(self, tokens, cache, lengths, remaining,
                             b_attn: int, steps: int, sampling=None,
-                            lp_k=None):
+                            lp_k=None, flags=None):
         """Fused Algorithm-1 decode megastep: one jitted ``lax.scan`` over
         ``steps`` module-granularity decode steps.
 
@@ -181,16 +181,18 @@ class ModuleRuntime:
         pipeline (see models.transformer.decode_page) and appends the
         advanced per-slot state to the returned tuple.  ``lp_k`` (None |
         0 | K) swaps the raw token rows for the packed logprob plane of
-        ``models.transformer.pack_logprob_block``."""
+        ``models.transformer.pack_logprob_block``.  ``flags`` is the
+        static :class:`repro.sampling.SampleFlags` plan (sampled path);
+        it is part of the executable cache key."""
         B = int(tokens.shape[0])
         n_sub = max(B // max(b_attn, 1), 1)
-        key = (int(steps), n_sub, sampling is not None, lp_k)
+        key = (int(steps), n_sub, sampling is not None, lp_k, flags)
         fn = _lru_get(self._page_cache, key, _PAGE_JIT_CAP,
                       lambda: jax.jit(partial(self._page_impl,
                                               steps=int(steps),
                                               n_sub=n_sub,
                                               sampled=sampling is not None,
-                                              lp_k=lp_k),
+                                              lp_k=lp_k, flags=flags),
                                       donate_argnums=(0,)))
         if sampling is None:
             return fn(cache, tokens, lengths, remaining)
@@ -199,8 +201,9 @@ class ModuleRuntime:
 
     def _page_impl(self, cache, tokens, lengths, remaining, sp=None,
                    state=None, *, steps: int, n_sub: int,
-                   sampled: bool = False, lp_k=None):
-        from repro.sampling import sample_step
+                   sampled: bool = False, lp_k=None, flags=None):
+        from repro.sampling import DEFAULT_FLAGS, sample_step
+        flags = flags or DEFAULT_FLAGS
 
         cfg = self.cfg
         B = tokens.shape[0]
@@ -257,12 +260,17 @@ class ModuleRuntime:
             cache, tokens, lengths, remaining, state = carry
             h, new_cache = model_step(cache, tokens, lengths)
             logits = self._head_logits_impl(h)
-            nxt, live, remaining, state = sample_step(logits, remaining,
-                                                      state, sp)
+            if lp_k is None:
+                nxt, live, remaining, state = sample_step(
+                    logits, remaining, state, sp, flags)
+            else:
+                nxt, live, remaining, state, lanes = sample_step(
+                    logits, remaining, state, sp, flags, lp_k=lp_k)
             tokens = jnp.where(live, nxt, tokens)
             lengths = lengths + live.astype(jnp.int32)
-            return (new_cache, tokens, lengths, remaining, state), \
-                emit(tokens, logits)
+            out = (tokens if lp_k is None
+                   else T.pack_plane_from_lanes(tokens, lanes))
+            return (new_cache, tokens, lengths, remaining, state), out
 
         (cache, tokens, lengths, remaining, state), block = jax.lax.scan(
             one_step, (cache, tokens, lengths, remaining, state), None,

@@ -1,3 +1,26 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel registry.
+
+Each entry is an ``<name>.py`` (kernel) + ``ops.py`` (jitted wrapper) +
+``ref.py`` (pure-jnp oracle) triple; tests/test_kernels.py and
+tests/test_fused_sampling.py hold every kernel to its oracle in
+interpret mode.  ``get_kernel(name)`` resolves the wrapped entry point
+and its reference lazily so importing the package never pulls Pallas in.
+"""
+import importlib
+
+# name -> (ops entry point, reference oracle)
+KERNELS = {
+    "flash_attention": ("flash_attention", "ref_attention"),
+    "paged_attention": ("paged_attention", "ref_paged_attention"),
+    "moe_gemm": ("moe_ffn", "ref_moe_ffn"),
+    "ssd_scan": ("ssd_state_scan", "ref_state_scan"),
+    "fused_sampling": ("fused_sample", "ref_fused_sample"),
+}
+
+
+def get_kernel(name: str):
+    """(jitted op, pure-jnp reference) for a registered kernel."""
+    op_name, ref_name = KERNELS[name]
+    ops = importlib.import_module(f"repro.kernels.{name}.ops")
+    ref = importlib.import_module(f"repro.kernels.{name}.ref")
+    return getattr(ops, op_name), getattr(ref, ref_name)

@@ -1,0 +1,315 @@
+"""Pallas TPU fused-sampling kernel: joint top-k/top-p/min-p + Gumbel-max.
+
+Replaces the sampling hot path's sorted (B, V) temporaries with tiled
+streaming passes over the vocab.  Grid = (B, 7 phases, V/TILE tiles);
+the batch axis is parallel, phases and tiles are sequential so all
+per-row state lives in VMEM/SMEM scratch (the paged_attention pattern):
+
+  phase 0  online-softmax stats: running max m, denominator l, greedy
+           argmax — plus, when logprob lanes are requested, the raw-logit
+           stats and a streaming top-K merge (the PR 3 transfer plane's
+           pre-filter lanes, fused into the same kernel launch).
+  phase 1  coarse NB-bucket histogram (counts + exp-mass) of
+           ``(m - SPAN, m]``; pick the bucket where the cumulative count
+           crosses k; the mass histogram is kept for tau_p's level 0.
+  phase 2/3  two count-crossing refinements -> tau_k and Z_kept (the
+           kept set's softmax mass) at SPAN/NB^3 ~ 2e-6 nat resolution.
+  phase 4/5  two mass-crossing refinements against p * Z_kept -> tau_p
+           (level 0 reused phase 1's histogram: no extra pass).
+  phase 6  Gumbel-max over the kept set ``x >= max(tau_k, tau_p, tau_m)``.
+
+The Gumbel noise is an INPUT (the token-addressed
+``sampling.sample.token_gumbel`` rows — one threefry hash of
+``fold_in(step_key, token_id)`` per token), not kernel-generated: the
+draw stays bitwise-shared with every XLA fallback tier, the
+per-sequence stream stays a pure function of (seed, t, token), and the
+kernel stays deterministic — which is what lets
+tests/test_fused_sampling.py hold it exactly to ``ref.py``.
+
+Histogram binning is scatter-free (bucket-index compare against a
+broadcasted iota, then a lane reduction): O(TILE * NB) VPU work per
+tile, but only O(V) HBM traffic per phase — the trade "Mind the Memory
+Gap" calls for in the bandwidth-bound decode regime.  A further step
+(noted, not taken) is parking the whole row in VMEM across phases
+(128k f32 = 512 KB) to collapse the 7 reads of V to one.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.kernels.fused_sampling.ref import LEVELS, NB, NEG, SPAN
+
+assert LEVELS == 3, "kernel phase layout is built for 3 histogram levels"
+
+TILE = 512
+
+# SMEM scalar-state slots (one row's state across the sequential phases)
+_M, _L, _HI, _W, _REM, _ABOVE, _INB, _TAU_K, _Z, _TARGET, _ABOVE_P, \
+    _TAU_P, _TAU, _GVAL, _GIDX, _SVAL, _SIDX, _M_RAW, _L_RAW = range(19)
+_NST = 19
+
+_PH_STATS, _PH_COARSE, _PH_K1, _PH_K2, _PH_P1, _PH_P2, _PH_SAMPLE = range(7)
+_NPH = 7
+
+
+def _kernel(k_ref, p_ref, minp_ref, x_ref, g_ref, *rest,
+            tiles: int, lanes_k: int):
+    if lanes_k >= 0:
+        raw_ref = rest[0]
+        outs = rest[1:]
+        o_sam, o_greedy, o_tau, o_m, o_l, o_mr, o_lr = outs[:7]
+        if lanes_k > 0:
+            o_tv, o_ti = outs[7:9]
+            st, hist_cnt, hist_mass, coarse_mass, topv, topi = outs[9:]
+        else:
+            st, hist_cnt, hist_mass, coarse_mass = outs[7:]
+    else:
+        o_sam, o_greedy, o_tau, o_m, o_l = rest[:5]
+        st, hist_cnt, hist_mass, coarse_mass = rest[5:]
+
+    b = pl.program_id(0)
+    ph = pl.program_id(1)
+    j = pl.program_id(2)
+    x = x_ref[0].astype(jnp.float32)                       # (TILE,)
+    pos = j * TILE + jax.lax.broadcasted_iota(
+        jnp.int32, (TILE, 1), 0)[:, 0]
+
+    @pl.when((ph == _PH_STATS) & (j == 0))
+    def _init():
+        st[_M] = jnp.float32(-jnp.inf)
+        st[_L] = jnp.float32(0.0)
+        st[_GVAL] = jnp.float32(-jnp.inf)
+        st[_GIDX] = jnp.float32(0.0)
+        if lanes_k >= 0:
+            st[_M_RAW] = jnp.float32(-jnp.inf)
+            st[_L_RAW] = jnp.float32(0.0)
+            if lanes_k > 0:
+                topv[...] = jnp.full_like(topv, NEG)
+                topi[...] = jnp.zeros_like(topi)
+
+    # ---------------------------------------------------- phase 0: stats
+    @pl.when(ph == _PH_STATS)
+    def _stats():
+        m_prev = st[_M]
+        tmax = jnp.max(x)
+        m_new = jnp.maximum(m_prev, tmax)
+        st[_L] = st[_L] * jnp.exp(m_prev - m_new) + jnp.sum(jnp.exp(x - m_new))
+        st[_M] = m_new
+
+        @pl.when(tmax > st[_GVAL])
+        def _():
+            st[_GVAL] = tmax
+            st[_GIDX] = (j * TILE + jnp.argmax(x)).astype(jnp.float32)
+
+        if lanes_k >= 0:
+            r = raw_ref[0].astype(jnp.float32)
+            mr_prev = st[_M_RAW]
+            mr_new = jnp.maximum(mr_prev, jnp.max(r))
+            st[_L_RAW] = (st[_L_RAW] * jnp.exp(mr_prev - mr_new)
+                          + jnp.sum(jnp.exp(r - mr_new)))
+            st[_M_RAW] = mr_new
+            if lanes_k > 0:
+                # streaming top-K merge; first-occurrence argmax keeps the
+                # lax.top_k lowest-index tie-breaking (prev lanes, from
+                # earlier tiles, come first in the candidate row)
+                cv = jnp.concatenate([topv[0], r])
+                ci = jnp.concatenate([topi[0], pos.astype(jnp.float32)])
+                sel = jax.lax.broadcasted_iota(
+                    jnp.int32, (lanes_k + TILE, 1), 0)[:, 0]
+                nv, ni = [], []
+                for _kk in range(lanes_k):
+                    a = jnp.argmax(cv)
+                    nv.append(cv[a])
+                    ni.append(ci[a])
+                    cv = jnp.where(sel == a, NEG, cv)
+                topv[0] = jnp.stack(nv)
+                topi[0] = jnp.stack(ni)
+
+    # ------------------------------------------- histogram accumulation
+    def _bin(sel):
+        hi, width = st[_HI], st[_W]
+        sel = sel & (x <= hi)
+        idx = jnp.clip(jnp.floor((hi - x) / width), 0, NB - 1).astype(
+            jnp.int32)
+        oh = ((idx[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (TILE, NB), 1)) & sel[:, None])
+        hist_cnt[0] = hist_cnt[0] + jnp.sum(oh.astype(jnp.float32), axis=0)
+        w = jnp.exp(x - st[_M])
+        hist_mass[0] = hist_mass[0] + jnp.sum(
+            jnp.where(oh, w[:, None], 0.0), axis=0)
+
+    def _zero_hist():
+        hist_cnt[...] = jnp.zeros_like(hist_cnt)
+        hist_mass[...] = jnp.zeros_like(hist_mass)
+
+    def _crossing(cum, per, target):
+        got = cum >= target
+        bk = jnp.where(jnp.any(got), jnp.argmax(got), NB - 1)
+        return bk, cum[bk] - per[bk]
+
+    @pl.when((ph == _PH_STATS) & (j == tiles - 1))
+    def _open_coarse():
+        st[_HI] = st[_M]
+        st[_W] = jnp.float32(SPAN / NB)
+        st[_REM] = jnp.clip(k_ref[b], 1, tiles * TILE).astype(jnp.float32)
+        st[_ABOVE] = jnp.float32(0.0)
+        _zero_hist()
+
+    @pl.when((ph == _PH_COARSE) | (ph == _PH_K1) | (ph == _PH_K2))
+    def _bin_k():
+        _bin(jnp.ones_like(x, bool))
+
+    def _k_level_update():
+        cnt, mass = hist_cnt[0], hist_mass[0]
+        bk, above_cnt = _crossing(jnp.cumsum(cnt), cnt, st[_REM])
+        st[_ABOVE] = st[_ABOVE] + jnp.cumsum(mass)[bk] - mass[bk]
+        st[_REM] = st[_REM] - above_cnt
+        st[_INB] = mass[bk]
+        st[_HI] = st[_HI] - bk.astype(jnp.float32) * st[_W]
+        st[_TAU_K] = st[_HI] - st[_W]
+        st[_W] = st[_W] / NB
+        _zero_hist()
+
+    @pl.when((ph == _PH_COARSE) & (j == tiles - 1))
+    def _end_coarse():
+        coarse_mass[...] = hist_mass[...]
+        _k_level_update()
+
+    @pl.when(((ph == _PH_K1) | (ph == _PH_K2)) & (j == tiles - 1))
+    def _end_k():
+        _k_level_update()
+
+        @pl.when(ph == _PH_K2)
+        def _open_p():
+            kk = k_ref[b]
+            st[_TAU_K] = jnp.where(kk > 0, st[_TAU_K], -jnp.inf)
+            st[_Z] = jnp.where(kk > 0, st[_ABOVE] + st[_INB], st[_L])
+            st[_TARGET] = p_ref[b] * st[_Z]
+            cm = coarse_mass[0]
+            bp, above = _crossing(jnp.cumsum(cm), cm, st[_TARGET])
+            st[_ABOVE_P] = above
+            w0 = jnp.float32(SPAN / NB)
+            st[_HI] = st[_M] - bp.astype(jnp.float32) * w0
+            st[_TAU_P] = st[_HI] - w0
+            st[_W] = w0 / NB
+
+    @pl.when((ph == _PH_P1) | (ph == _PH_P2))
+    def _bin_p():
+        _bin(x >= st[_TAU_K])
+
+    @pl.when(((ph == _PH_P1) | (ph == _PH_P2)) & (j == tiles - 1))
+    def _end_p():
+        mass = hist_mass[0]
+        bp, above_l = _crossing(jnp.cumsum(mass), mass,
+                                st[_TARGET] - st[_ABOVE_P])
+        st[_ABOVE_P] = st[_ABOVE_P] + above_l
+        st[_HI] = st[_HI] - bp.astype(jnp.float32) * st[_W]
+        st[_TAU_P] = st[_HI] - st[_W]
+        st[_W] = st[_W] / NB
+        _zero_hist()
+
+        @pl.when(ph == _PH_P2)
+        def _close_tau():
+            tau_p = jnp.where(p_ref[b] < 1.0, st[_TAU_P], -jnp.inf)
+            tau_m = jnp.where(minp_ref[b] > 0.0,
+                              st[_M] + jnp.log(minp_ref[b]), -jnp.inf)
+            st[_TAU] = jnp.maximum(jnp.maximum(st[_TAU_K], tau_p), tau_m)
+            st[_SVAL] = jnp.float32(-jnp.inf)
+            st[_SIDX] = jnp.float32(0.0)
+
+    # ------------------------------------------- phase 6: Gumbel-max draw
+    @pl.when(ph == _PH_SAMPLE)
+    def _draw():
+        s = jnp.where(x >= st[_TAU], x + g_ref[0].astype(jnp.float32), NEG)
+        tmax = jnp.max(s)
+
+        @pl.when(tmax > st[_SVAL])
+        def _():
+            st[_SVAL] = tmax
+            st[_SIDX] = (j * TILE + jnp.argmax(s)).astype(jnp.float32)
+
+    @pl.when((ph == _PH_SAMPLE) & (j == tiles - 1))
+    def _flush():
+        o_sam[0] = st[_SIDX].astype(jnp.int32)
+        o_greedy[0] = st[_GIDX].astype(jnp.int32)
+        o_tau[0] = st[_TAU]
+        o_m[0] = st[_M]
+        o_l[0] = st[_L]
+        if lanes_k >= 0:
+            o_mr[0] = st[_M_RAW]
+            o_lr[0] = st[_L_RAW]
+            if lanes_k > 0:
+                o_tv[0] = topv[0]
+                o_ti[0] = topi[0].astype(jnp.int32)
+
+
+def fused_sampling_tpu(logits, gumbel, k, p, min_p, raw=None, *,
+                       lp_k: int = 0, with_lanes: bool = False,
+                       interpret: bool = False):
+    """logits/gumbel (B, V) f32 with V a multiple of TILE (pad with the
+    NEG sentinel / zeros — see ops.fused_sample); k (B,) i32, p/min_p
+    (B,) f32 scalar-prefetch rows; raw (B, V) only when ``with_lanes``.
+
+    Returns (sampled, greedy, tau, m, l[, m_raw, l_raw[, top_vals,
+    top_idx]]).
+    """
+    B, V = logits.shape
+    assert V % TILE == 0, V
+    tiles = V // TILE
+    lanes_k = (max(lp_k, 0) if with_lanes else -1)
+
+    row = pl.BlockSpec((1, TILE), lambda bb, ph, jj, kk, pp, mm: (bb, jj))
+    scalar = pl.BlockSpec((1,), lambda bb, ph, jj, kk, pp, mm: (bb,))
+    lane = pl.BlockSpec((1, max(lp_k, 1)),
+                        lambda bb, ph, jj, kk, pp, mm: (bb, 0))
+
+    in_specs = [row, row] + ([row] if with_lanes else [])
+    out_shapes = [jax.ShapeDtypeStruct((B,), jnp.int32),      # sampled
+                  jax.ShapeDtypeStruct((B,), jnp.int32),      # greedy
+                  jax.ShapeDtypeStruct((B,), jnp.float32),    # tau
+                  jax.ShapeDtypeStruct((B,), jnp.float32),    # m
+                  jax.ShapeDtypeStruct((B,), jnp.float32)]    # l
+    out_specs = [scalar] * 5
+    if with_lanes:
+        out_shapes += [jax.ShapeDtypeStruct((B,), jnp.float32),   # m_raw
+                       jax.ShapeDtypeStruct((B,), jnp.float32)]   # l_raw
+        out_specs += [scalar, scalar]
+        if lp_k > 0:
+            out_shapes += [jax.ShapeDtypeStruct((B, lp_k), jnp.float32),
+                           jax.ShapeDtypeStruct((B, lp_k), jnp.int32)]
+            out_specs += [lane, lane]
+
+    scratch = [pltpu.SMEM((_NST,), jnp.float32),
+               pltpu.VMEM((1, NB), jnp.float32),     # hist counts
+               pltpu.VMEM((1, NB), jnp.float32),     # hist mass
+               pltpu.VMEM((1, NB), jnp.float32)]     # coarse mass (tau_p L0)
+    if lanes_k > 0:
+        scratch += [pltpu.VMEM((1, lanes_k), jnp.float32),
+                    pltpu.VMEM((1, lanes_k), jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, _NPH, tiles),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    kernel = functools.partial(_kernel, tiles=tiles, lanes_k=lanes_k)
+    args = (k.astype(jnp.int32), p.astype(jnp.float32),
+            min_p.astype(jnp.float32), logits, gumbel)
+    if with_lanes:
+        args += (raw,)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,46 @@
+"""Jitted wrapper for the fused-sampling kernel (padding + output dict)."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_sampling.fused_sampling import (TILE,
+                                                         fused_sampling_tpu)
+from repro.kernels.fused_sampling.ref import NEG
+
+
+def _pad_rows(x, vp, fill):
+    B, V = x.shape
+    if V == vp:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((B, vp - V), fill, x.dtype)], axis=1)
+
+
+@partial(jax.jit, static_argnames=("lp_k", "with_lanes", "interpret"))
+def fused_sample(logits, gumbel, k, p, min_p, raw=None, *, lp_k: int = 0,
+                 with_lanes: bool = False, interpret: bool = False):
+    """Single-pass sample for a (B, V) batch of processed logits.
+
+    Pads V up to a TILE multiple with the NEG sentinel (padded tokens
+    carry zero probability mass and can never win either argmax).
+    Returns a dict with ``sampled``/``greedy`` (B,) i32, ``tau``/``m``/
+    ``l`` (B,) f32, plus — when ``with_lanes`` — the raw-logit softmax
+    stats ``m_raw``/``l_raw`` and, for ``lp_k > 0``, the ``top_vals``/
+    ``top_idx`` lanes ((B, lp_k), raw-logit values with lax.top_k
+    tie-breaking; log-softmax = top_vals - m_raw - log(l_raw)).
+    """
+    vp = -(-logits.shape[1] // TILE) * TILE
+    args = (_pad_rows(logits.astype(jnp.float32), vp, NEG),
+            _pad_rows(gumbel.astype(jnp.float32), vp, 0.0),
+            k, p, min_p)
+    if with_lanes:
+        args += (_pad_rows(raw.astype(jnp.float32), vp, NEG),)
+    outs = fused_sampling_tpu(*args, lp_k=lp_k, with_lanes=with_lanes,
+                              interpret=interpret)
+    names = ["sampled", "greedy", "tau", "m", "l"]
+    if with_lanes:
+        names += ["m_raw", "l_raw"]
+        if lp_k > 0:
+            names += ["top_vals", "top_idx"]
+    return dict(zip(names, outs))

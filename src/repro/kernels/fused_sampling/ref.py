@@ -1,0 +1,143 @@
+"""Pure-jnp oracle for the fused single-pass sampling kernel.
+
+Specifies, in plain vectorised jnp, EXACTLY the math the Pallas kernel
+(`fused_sampling.py`) runs tiled: an online-softmax stats pass, a joint
+top-k/top-p/min-p keep-threshold derived by histogram refinement over
+logit buckets (no sorted (B, V) temporaries), and a Gumbel-max draw over
+the kept set.  The interpret-mode parity tests in
+tests/test_fused_sampling.py hold the kernel to this file.
+
+Threshold semantics (shared with processors.joint_threshold)
+------------------------------------------------------------
+All three filters are value thresholds, so their sequential composition
+keeps exactly ``{x : x >= max(tau_k, tau_p, tau_m)}``:
+
+* ``tau_k``  — the k-th largest logit, located by LEVELS rounds of
+  NB-bucket histogram refinement over ``(m - SPAN, m]``: each round bins
+  the current interval, walks the cumulative count from the top to the
+  bucket where it crosses k, and recurses into that bucket.  Final
+  resolution SPAN/NB^LEVELS (~2e-6 nats), i.e. near-ulp "ties" at the
+  k-th value are kept — the tie-keeping the sort pipeline has, widened
+  to the bucket width.
+* ``tau_p``  — the nucleus edge of the top-k-filtered distribution:
+  same refinement, crossing on cumulative exp-mass against
+  ``p * Z_kept`` (``Z_kept`` = mass of the kept-by-top-k set, a free
+  by-product of the tau_k refinement).  Level 0 reuses the coarse mass
+  histogram (no extra pass); refinement levels mask to ``x >= tau_k``.
+* ``tau_m``  — ``m + log(min_p)``: the renormalisation of earlier
+  filters cancels on both sides of the min-p compare.
+
+Values below ``m - SPAN`` carry exp-mass < e^-SPAN ~ 1e-14 and land in
+the catch-all bottom bucket: a top-k whose k-th value sits that deep
+keeps extra near-zero-probability tokens, which is invisible to the
+sampled distribution — the documented approximation of this kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30          # filtered-logit sentinel (matches sampling/processors)
+NB = 256             # histogram buckets per refinement level
+SPAN = 32.0          # nats below the max covered by the coarse histogram
+LEVELS = 3           # coarse + 2 refinements -> SPAN/NB**3 ~ 1.9e-6 nats
+
+
+def _hist(x, w, sel, hi, width):
+    """Bin ``w`` (weights) of the selected ``x <= hi`` into NB buckets of
+    ``width`` below ``hi``; values under the interval clamp into the
+    catch-all bucket NB-1 (the refinement recurses into it)."""
+    sel = sel & (x <= hi)
+    idx = jnp.clip(jnp.floor((hi - x) / width).astype(jnp.int32), 0, NB - 1)
+    oh = (idx[:, None] == jnp.arange(NB)[None, :]) & sel[:, None]
+    cnt = jnp.sum(oh, axis=0).astype(jnp.float32)
+    mass = jnp.sum(jnp.where(oh, w[:, None], 0.0), axis=0)
+    return cnt, mass
+
+
+def _cross(cum, per, target):
+    """First bucket where ``cum`` reaches ``target`` (bottom bucket when
+    it never does), plus the cumulative weight strictly above it."""
+    got = cum >= target
+    b = jnp.where(jnp.any(got), jnp.argmax(got), NB - 1)
+    return b, cum[b] - per[b]
+
+
+def ref_stats(x):
+    """(m, l, greedy): max, softmax denominator w.r.t. m, argmax."""
+    m = jnp.max(x)
+    return m, jnp.sum(jnp.exp(x - m)), jnp.argmax(x).astype(jnp.int32)
+
+
+def ref_joint_threshold(x, k, p, min_p):
+    """Histogram-refined joint threshold for one row ``x`` (V,) f32.
+
+    Returns a dict with ``tau`` (the joint threshold), the per-filter
+    ``tau_k``/``tau_p``/``tau_m`` (-inf when disabled), the softmax
+    stats ``m``/``l`` and the kept-set mass ``z``."""
+    V = x.shape[-1]
+    m, l, _ = ref_stats(x)
+    w = jnp.exp(x - m)
+    true = jnp.ones_like(x, bool)
+
+    # --- tau_k: count-crossing refinement (+ coarse mass kept for tau_p)
+    hi, width = m, SPAN / NB
+    rem = jnp.clip(k, 1, V).astype(jnp.float32)
+    above_mass = jnp.float32(0.0)
+    coarse_mass = None
+    tau_k = in_mass = jnp.float32(0.0)
+    for lvl in range(LEVELS):
+        cnt, mass = _hist(x, w, true, hi, width)
+        if lvl == 0:
+            coarse_mass = mass
+        b, above_cnt = _cross(jnp.cumsum(cnt), cnt, rem)
+        above_mass += jnp.cumsum(mass)[b] - mass[b]
+        rem = rem - above_cnt
+        in_mass = mass[b]
+        hi = hi - b.astype(jnp.float32) * width
+        tau_k = hi - width
+        width = width / NB
+    z = jnp.where(k > 0, above_mass + in_mass, l)
+    tau_k = jnp.where(k > 0, tau_k, -jnp.inf)
+
+    # --- tau_p: mass-crossing refinement against p * z
+    target = p * z
+    b, above = _cross(jnp.cumsum(coarse_mass), coarse_mass, target)
+    hi = m - b.astype(jnp.float32) * (SPAN / NB)
+    tau_p, width = hi - SPAN / NB, SPAN / NB / NB
+    kept = x >= tau_k
+    for _ in range(1, LEVELS):
+        _, mass = _hist(x, w, kept, hi, width)
+        b, above_l = _cross(jnp.cumsum(mass), mass, target - above)
+        above += above_l
+        hi = hi - b.astype(jnp.float32) * width
+        tau_p = hi - width
+        width = width / NB
+    tau_p = jnp.where(p < 1.0, tau_p, -jnp.inf)
+
+    tau_m = jnp.where(min_p > 0.0, m + jnp.log(min_p), -jnp.inf)
+    tau = jnp.maximum(jnp.maximum(tau_k, tau_p), tau_m)
+    return {"tau": tau, "tau_k": tau_k, "tau_p": tau_p, "tau_m": tau_m,
+            "m": m, "l": l, "z": z}
+
+
+def ref_fused_sample(x, gumbel, k, p, min_p):
+    """One row: joint threshold + Gumbel-max draw over the kept set.
+    Returns dict(sampled, greedy, tau, m, l)."""
+    th = ref_joint_threshold(x, k, p, min_p)
+    m, _, greedy = ref_stats(x)
+    s = jnp.where(x >= th["tau"], x + gumbel, NEG)
+    return {"sampled": jnp.argmax(s).astype(jnp.int32), "greedy": greedy,
+            "tau": th["tau"], "m": th["m"], "l": th["l"]}
+
+
+def ref_lanes(raw, lp_k: int):
+    """Raw-logit stats + top-K lanes for the logprob transfer plane.
+    Values are raw logits (log-softmax = val - m_raw - log(l_raw));
+    ties break to the lowest index, matching ``jax.lax.top_k``."""
+    m = jnp.max(raw)
+    l = jnp.sum(jnp.exp(raw - m))
+    out = {"m_raw": m, "l_raw": l, "top_vals": None, "top_idx": None}
+    if lp_k > 0:
+        out["top_vals"], out["top_idx"] = jax.lax.top_k(raw, lp_k)
+    return out

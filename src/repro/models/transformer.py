@@ -512,6 +512,22 @@ def pack_logprob_block(tokens, logits, lp_k: int):
     return jnp.concatenate(parts, axis=-1)
 
 
+def pack_plane_from_lanes(tokens, lanes):
+    """Assemble the ``pack_logprob_block`` layout from the lanes dict
+    ``repro.sampling.sample_step`` returns (chosen_lp + top-K vals/ids),
+    so the sampled megastep reuses the single fused-sampling pass for the
+    transfer plane instead of paying a second full-vocab log_softmax +
+    top_k.  Layout-identical to ``pack_logprob_block``."""
+    parts = [jax.lax.bitcast_convert_type(tokens.astype(jnp.int32),
+                                          jnp.float32)[:, None],
+             lanes["chosen_lp"][:, None]]
+    if lanes["top_vals"] is not None:
+        parts += [lanes["top_vals"],
+                  jax.lax.bitcast_convert_type(
+                      lanes["top_idx"].astype(jnp.int32), jnp.float32)]
+    return jnp.concatenate(parts, axis=-1)
+
+
 def unpack_logprob_block(block_np):
     """Inverse of ``pack_logprob_block`` for a (steps, B, 2+2K) host array.
     Returns (tokens (steps,B) i32, chosen_lp (steps,B) f32,
@@ -529,7 +545,7 @@ def unpack_logprob_block(block_np):
 
 def decode_page(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
                 lengths, remaining, steps: int, unroll=False,
-                sampling=None, lp_k=None):
+                sampling=None, lp_k=None, flags=None):
     """Fused decode megastep: `steps` decode steps in ONE program.
 
     A ``lax.scan`` over ``decode_step`` that keeps tokens/lengths/KV on
@@ -557,7 +573,15 @@ def decode_page(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
     With ``lp_k`` set (0 = chosen-token only, K > 0 = also the top-K
     alternatives) each step's output row is the packed
     ``pack_logprob_block`` plane — (steps, B, 2+2K) f32 — built from the
-    RAW model logits, so logprobs ride the page's one transfer.
+    RAW (pre-sampling-pipeline) model logits, so logprobs ride the
+    page's one transfer and report pre-filter values even under
+    top-k/top-p sampling.
+
+    ``flags`` (a static :class:`repro.sampling.SampleFlags`, sampled
+    path only) bakes the host-decided sampling plan into the executable:
+    XLA shared-sort tier vs the Pallas fused kernel, and whether the
+    penalty state ops run at all.  On the sampled+logprobs path the
+    logprob lanes come out of the same fused-sampling pass.
     """
     if sampling is None:
         if lp_k is None:
@@ -588,19 +612,25 @@ def decode_page(cfg: ModelConfig, axes: MeshAxes, params, cache, tokens,
             body, (cache, tokens, lengths, remaining), None, length=steps)
         return block, tokens, lengths, remaining, cache
 
-    from repro.sampling import sample_step
+    from repro.sampling import DEFAULT_FLAGS, sample_step
     sp, state = sampling
+    flags = flags or DEFAULT_FLAGS
 
     def body(carry, _):
         cache, tokens, lengths, remaining, state = carry
         logits, cache = decode_step_logits(cfg, axes, params, cache, tokens,
                                            lengths, unroll=unroll)
-        nxt, live, remaining, state = sample_step(logits, remaining, state,
-                                                  sp)
+        if lp_k is None:
+            nxt, live, remaining, state = sample_step(logits, remaining,
+                                                      state, sp, flags)
+            lanes = None
+        else:
+            nxt, live, remaining, state, lanes = sample_step(
+                logits, remaining, state, sp, flags, lp_k=lp_k)
         tokens = jnp.where(live, nxt, tokens)
         lengths = lengths + live.astype(jnp.int32)
         out = (tokens if lp_k is None
-               else pack_logprob_block(tokens, logits, lp_k))
+               else pack_plane_from_lanes(tokens, lanes))
         return (cache, tokens, lengths, remaining, state), out
 
     (cache, tokens, lengths, remaining, state), block = jax.lax.scan(

@@ -40,10 +40,15 @@ same way via ``ModuleRuntime.forward_decode_page``.
 Sampling: when any active coroutine carries non-default SamplingParams,
 ``decode_page`` switches to the sampled megastep variant — same fused
 scan with the per-slot PRNG position and penalty counts riding the carry
-(repro.sampling) — still one device→host transfer per page.  Per-slot
-sampling state is re-derived from the coroutine at ``install_slot``
-(keys are fold_in(seed, token_index), counts a bincount of its tokens),
-so slot churn and migration never perturb a sequence's sampled stream.
+(repro.sampling) — still one device→host transfer per page.  The engine
+derives a static ``SampleFlags`` plan from the active batch (Pallas
+kernel vs shared-sort XLA tier, penalty/stop/greedy-select skips) that
+is part of the megastep jit key.  Per-slot sampling state is re-derived
+from the coroutine at ``install_slot`` (keys are fold_in(seed,
+token_index), counts a bincount of its tokens) — staged host-side and
+flushed to the device in ONE batched scatter at the next sampled page,
+so slot churn never perturbs a sequence's sampled stream and never pays
+per-slot eager dispatches.
 """
 from __future__ import annotations
 
@@ -66,6 +71,10 @@ from repro.models import transformer as T
 from repro.models.api import MeshAxes, ModelConfig
 
 _PREFILL_JIT_CAP = 8    # LRU cap on (B, S)-bucketed prefill executables
+# the per-slot sampling-params rows the batched sampler consumes
+_SAMPLE_ROW_KEYS = ("temperature", "top_k", "top_p", "min_p",
+                    "repetition_penalty", "presence_penalty",
+                    "frequency_penalty")
 # LRU cap on (scan-length, sampled, lp_k)-keyed megasteps — sized for all
 # pow2 chunk sizes of a page x {greedy, sampled} x {no-lp, lp} variants
 # coexisting without steady-state eviction/re-jit churn
@@ -136,6 +145,14 @@ class NodeEngine:
             "counts": jnp.zeros((max_active, V), jnp.int32),
             "prompt_counts": jnp.zeros((max_active, V), jnp.int32),
         }
+        # slot installs stage their re-derived sampling state here (host
+        # numpy, keyed by slot so a re-install overwrites) and the next
+        # sampled decode_page scatters everything in one batch — per-slot
+        # eager device dispatches were the dominant sampled-path overhead
+        self._pending_smp: "OrderedDict[int, tuple]" = OrderedDict()
+        self._prefill_sample_cache: "OrderedDict[tuple, object]" = \
+            OrderedDict()
+        self._flush_cache: "OrderedDict[int, object]" = OrderedDict()
 
         self._decode = jax.jit(
             lambda p, c, t, l: T.decode_step(cfg, self.axes, p, c, t, l),
@@ -204,25 +221,50 @@ class NodeEngine:
         sampled megastep draw for them); their state rows are don't-care
         (temperature<=0 takes the argmax branch), so the O(V) count
         derivation and device scatters are skipped on the slot-churn hot
-        path of all-greedy workloads."""
+        path of all-greedy workloads.  The derivation itself is pure
+        numpy; the device scatter is deferred to the next sampled page
+        (``_flush_pending_sampling``) so a refill installing n slots
+        costs ONE batched update instead of 4n eager dispatches."""
         s = co.slot
         row = smp.pack_params([co.sampling], [co.seq_id])
         for k in self._sp_host:
             self._sp_host[k][s] = row[k][0]
         self._sp_dev = None             # host mirror dirty; re-upload lazily
         if co.sampling.is_greedy_default:
+            self._pending_smp.pop(s, None)
             return
-        st = self._sample_state
-        V = st["counts"].shape[1]
+        V = self._sample_state["counts"].shape[1]
         st_row = smp.init_state(row["seed"], [co.prompt], [co.generated], V)
-        st["base_key"] = st["base_key"].at[s].set(
-            smp.base_keys(st_row["seed"])[0])
-        st["gen_count"] = st["gen_count"].at[s].set(
-            int(st_row["gen_count"][0]))
-        st["counts"] = st["counts"].at[s].set(
-            jnp.asarray(st_row["counts"][0]))
-        st["prompt_counts"] = st["prompt_counts"].at[s].set(
-            jnp.asarray(st_row["prompt_counts"][0]))
+        self._pending_smp[s] = (smp.base_keys_host(st_row["seed"])[0],
+                                st_row["gen_count"][0], st_row["counts"][0],
+                                st_row["prompt_counts"][0])
+
+    def _flush_pending_sampling(self):
+        """Apply all staged slot-install sampling rows to the device
+        state in ONE jitted batched scatter (row counts are pow2-padded
+        by repeating the first row — duplicate identical updates are
+        harmless — so slot churn reuses a handful of executables)."""
+        if not self._pending_smp:
+            return
+        slots = list(self._pending_smp)
+        rows = list(self._pending_smp.values())
+        self._pending_smp.clear()
+        n = _pow2(len(slots))
+        slots += [slots[0]] * (n - len(slots))
+        rows += [rows[0]] * (n - len(rows))
+        cols = [np.stack([r[i] for r in rows]) for i in range(4)]
+
+        def make():
+            def _apply(state, sl, bk, gc, cnt, pc):
+                return {"base_key": state["base_key"].at[sl].set(bk),
+                        "gen_count": state["gen_count"].at[sl].set(gc),
+                        "counts": state["counts"].at[sl].set(cnt),
+                        "prompt_counts":
+                            state["prompt_counts"].at[sl].set(pc)}
+            return jax.jit(_apply, donate_argnums=(0,))
+        fn = _lru_get(self._flush_cache, n, 8, make)
+        self._sample_state = fn(self._sample_state,
+                                jnp.asarray(slots, jnp.int32), *cols)
 
     def _sp_device(self) -> Dict:
         """Packed per-slot sampling params as device arrays (cached until
@@ -264,6 +306,10 @@ class NodeEngine:
         sampled = any(not c.sampling.is_greedy_default for c in active)
         want_lp = [c for c in active if c.logprobs]
         lp_k = max(c.top_logprobs for c in want_lp) if want_lp else None
+        # static sampling plan (backend / penalty skip / sort tier) decided
+        # host-side from the active params — part of the jit cache key
+        flags = (smp.flags_for([c.sampling for c in active],
+                               T.padded_vocab(self.cfg)) if sampled else None)
         if not self.fused and not sampled:
             return self._decode_page_looped(active, P, lp_k)
         # exact step count via pow2 decomposition (40 -> 32+8): each chunk
@@ -280,6 +326,8 @@ class NodeEngine:
             rem[co.slot] = co.remaining
         rem_j = jnp.asarray(rem)
         sp = self._sp_device() if sampled else None
+        if sampled:
+            self._flush_pending_sampling()
         state = self._sample_state
         blocks = []
         left = steps
@@ -289,9 +337,10 @@ class NodeEngine:
                 out = self.module_rt.forward_decode_page(
                     self.tokens, self.cache, self.lengths, rem_j,
                     self.b_attn, chunk,
-                    sampling=(sp, state) if sampled else None, lp_k=lp_k)
+                    sampling=(sp, state) if sampled else None, lp_k=lp_k,
+                    flags=flags)
             else:
-                mega = self._get_megastep(chunk, sampled, lp_k)
+                mega = self._get_megastep(chunk, sampled, lp_k, flags)
                 args = (self.params, self.cache, self.tokens, self.lengths,
                         rem_j) + ((sp, state) if sampled else ())
                 out = mega(*args)
@@ -350,22 +399,37 @@ class NodeEngine:
                 co.top_token_logprobs.append(
                     [(int(topi[t][j]), float(topv[t][j])) for j in range(k)])
 
-    def _get_megastep(self, steps: int, sampled: bool = False, lp_k=None):
+    def _get_megastep(self, steps: int, sampled: bool = False, lp_k=None,
+                      flags=None):
         def make():
             if sampled:
                 def _mega(params, cache, tokens, lengths, remaining, sp,
                           state):
                     return T.decode_page(self.cfg, self.axes, params, cache,
                                          tokens, lengths, remaining, steps,
-                                         sampling=(sp, state), lp_k=lp_k)
+                                         sampling=(sp, state), lp_k=lp_k,
+                                         flags=flags)
             else:
                 def _mega(params, cache, tokens, lengths, remaining):
                     return T.decode_page(self.cfg, self.axes, params, cache,
                                          tokens, lengths, remaining, steps,
                                          lp_k=lp_k)
             return jax.jit(_mega, donate_argnums=(1,))
-        return _lru_get(self._megastep_cache, (steps, sampled, lp_k),
+        return _lru_get(self._megastep_cache, (steps, sampled, lp_k, flags),
                         _MEGASTEP_JIT_CAP, make)
+
+    def _get_prefill_sampler(self, n: int, flags):
+        """Jitted first-token draw (keys = fold_in(base, 0)); without the
+        cache every prefill re-traced the eagerly-vmapped sampler, which
+        cost more than the prefill forward itself."""
+        def make():
+            def _draw(logits2d, pcounts, counts, sp_rows, base):
+                keys = smp.step_keys(base, jnp.zeros((n,), jnp.int32))
+                return smp.sample(logits2d, pcounts, counts, sp_rows, keys,
+                                  flags)
+            return jax.jit(_draw)
+        return _lru_get(self._prefill_sample_cache, (n, flags),
+                        _PREFILL_JIT_CAP, make)
 
     def _decode_page_looped(self, active: Sequence[SequenceCoroutine],
                             P: int, lp_k=None):
@@ -546,13 +610,14 @@ class NodeEngine:
             st = smp.init_state(sp["seed"], [list(c.prompt) for c in cos],
                                 [[] for _ in cos],
                                 T.padded_vocab(self.cfg))
-            keys = smp.step_keys(smp.base_keys(st["seed"]),
-                                 jnp.asarray(st["gen_count"]))
-            first = self._to_host(smp.sample(
+            flags = smp.flags_for([c.sampling for c in cos],
+                                  T.padded_vocab(self.cfg))
+            draw = self._get_prefill_sampler(n, flags)
+            first = self._to_host(draw(
                 logits[:n, 0, :], jnp.asarray(st["prompt_counts"]),
                 jnp.asarray(st["counts"]),
-                {k: jnp.asarray(v) for k, v in sp.items() if k != "seed"},
-                keys))
+                {k: jnp.asarray(sp[k]) for k in _SAMPLE_ROW_KEYS},
+                jnp.asarray(smp.base_keys_host(st["seed"]))))
         else:
             logits_np = self._to_host(logits)
             first = np.argmax(logits_np[:n, 0], axis=-1)

@@ -6,14 +6,19 @@ The subsystem has three layers:
   on every :class:`~repro.core.coroutine.SequenceCoroutine`, plus
   ``pack_params`` which turns a list of per-sequence params into the
   (B,)-batched device arrays the jitted pipeline consumes.
-* ``processors`` — pure jittable logit processors (penalties, temperature,
-  top-k, top-p, min-p).  Every processor is an exact identity at its
-  parameter's default value, so a default-constructed SamplingParams run
-  through the full pipeline reproduces greedy argmax bit-for-bit.
-* ``sample``     — the per-slot ``sample_one`` function and the batched
-  ``sample`` entry point (``jax.vmap`` across device slots), plus the
-  deterministic PRNG-state helpers threaded as scan carry through the
-  fused decode megastep.
+* ``processors`` — pure jittable logit processors: penalties and
+  temperature, then ONE joint top-k/top-p/min-p value threshold
+  (``joint_threshold``) instead of a sort+softmax per filter.  Every
+  stage is an exact identity at its parameter's default value, so a
+  default-constructed SamplingParams run through the full pipeline
+  reproduces greedy argmax bit-for-bit.
+* ``sample``     — the batched ``sample`` entry point and the scan-step
+  ``sample_step``, dispatching on a static :class:`SampleFlags` plan
+  (``flags_for``): the Pallas fused-sampling kernel on TPU
+  (``repro.kernels.fused_sampling``) or one of three shared-sort XLA
+  tiers, with penalty/stop/greedy-select ops statically dropped when no
+  active slot needs them; plus the deterministic PRNG-state helpers
+  threaded as scan carry through the fused decode megastep.
 
 Reproducibility contract: the key used for a sequence's t-th sampled
 token is ``fold_in(PRNGKey(seed), t)`` — a pure function of the
@@ -26,15 +31,19 @@ from repro.sampling.params import (MAX_STOP_TOKENS, SamplingParams,
                                    pack_params)
 from repro.sampling.processors import (apply_min_p, apply_penalties,
                                        apply_temperature, apply_top_k,
-                                       apply_top_p, process_logits)
-from repro.sampling.sample import (base_keys, init_state, sample,
+                                       apply_top_p, joint_filter,
+                                       joint_threshold, process_logits)
+from repro.sampling.sample import (DEFAULT_FLAGS, SampleFlags, base_keys,
+                                   base_keys_host, default_backend,
+                                   flags_for, init_state, sample,
                                    sample_one, sample_step, step_keys,
-                                   stop_hit)
+                                   stop_hit, token_gumbel)
 
 __all__ = [
     "MAX_STOP_TOKENS", "SamplingParams", "pack_params",
     "apply_penalties", "apply_temperature", "apply_top_k", "apply_top_p",
-    "apply_min_p", "process_logits",
-    "base_keys", "init_state", "sample", "sample_one", "sample_step",
-    "step_keys", "stop_hit",
+    "apply_min_p", "joint_threshold", "joint_filter", "process_logits",
+    "DEFAULT_FLAGS", "SampleFlags", "base_keys", "base_keys_host",
+    "default_backend", "flags_for", "init_state", "sample", "sample_one",
+    "sample_step", "step_keys", "stop_hit", "token_gumbel",
 ]

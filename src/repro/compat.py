@@ -59,6 +59,21 @@ def use_mesh(mesh):
     return mesh            # 0.4.x: Mesh is itself a context manager
 
 
+def copy_to_host_async(arr):
+    """Start an async device→host copy of ``arr`` and return it.
+
+    ``jax.Array.copy_to_host_async`` exists on every supported line
+    (0.4.x ArrayImpl included), but jit tracing hands out Tracers and
+    some alternate backends return bare numpy — both lack the method, so
+    a missing attribute degrades to a no-op (the later blocking
+    materialization is then the copy).  The runtime's pipelined KV
+    staging (runtime/engine.py ``stage_appends``) funnels through here."""
+    fn = getattr(arr, "copy_to_host_async", None)
+    if fn is not None:
+        fn()
+    return arr
+
+
 def tpu_compiler_params(**kwargs):
     """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (0.4.x)."""
     from jax.experimental.pallas import tpu as pltpu

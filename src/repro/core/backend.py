@@ -33,6 +33,17 @@ member                    role
 ``reconfigure_partition`` re-lower decode over a device group (PARTITION)
 ``decode_page(act, P)``   decode up to P tokens for the active batch
 ``sync_appends(act)``     flush freshly decoded KV to the host store
+                          (blocking: stage + drain in one call)
+``stage_appends(act)``    issue the dirty-window KV gather and start the
+                          async device→host copy; snapshot per-slot
+                          [synced, length) metadata at issue time
+``drain_appends()``       land staged blobs in the host store.  Accepts
+                          ``keep_newest=n`` to leave the n most recently
+                          staged blobs in flight (the SYNC_DRAIN handler
+                          keeps 1 so it rides behind the next megastep);
+                          every consumer of host-store state (evict,
+                          migrate, failure recovery) must force a full
+                          drain first
 ``prefill(cos)``          prefill INIT coroutines, checkpoint, leave INACTIVE
 ========================  ==================================================
 """
@@ -44,7 +55,7 @@ from typing import (Any, Dict, List, Optional, Protocol, Sequence,
 PROTOCOL_METHODS = (
     "clock", "idle_tick", "acquire_slot", "free_slot", "extract_slot",
     "install_slot", "reconfigure_partition", "decode_page", "sync_appends",
-    "prefill",
+    "stage_appends", "drain_appends", "prefill",
 )
 PROTOCOL_ATTRS = (
     "node_id", "max_active", "num_devices", "host_store", "allocator",
@@ -80,6 +91,10 @@ class ExecutionBackend(Protocol):
     def decode_page(self, active: Sequence, P: int) -> None: ...
 
     def sync_appends(self, active: Sequence) -> None: ...
+
+    def stage_appends(self, active: Sequence) -> None: ...
+
+    def drain_appends(self, keep_newest: int = 0) -> None: ...
 
     def prefill(self, cos: Sequence) -> None: ...
 

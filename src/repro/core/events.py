@@ -22,14 +22,19 @@ from typing import Any, List, Optional, Tuple
 
 
 class EventKind(enum.IntEnum):          # ordering = processing priority
-    SYNC = 0              # wait for async KV appends (page boundary, §5.3 i)
-    SEQ_DONE = 1          # eviction of completed sequences (§5.3 ii)
-    PAGE_BOUNDARY = 2     # extension / yield decisions (§5.3 iii)
-    MODULE_READY = 3      # intra-forward successor enqueued by YIELD
-    REFILL = 4            # ON_REFILL_NODE (§5.1 Alg. 2)
-    LONG_TAIL = 5         # ON_LONG_TAIL -> PARTITION
-    MIGRATE = 6           # opportunistic load balancing
-    NODE_FAILURE = 7      # health monitor (§5.6)
+    SYNC = 0              # issue async KV appends (page boundary, §5.3 i)
+    SYNC_DRAIN = 1        # land in-flight KV blobs in the host store —
+    #                       priority-ordered BEFORE every consumer of
+    #                       host-store state (evict / migrate / failure),
+    #                       so a staged-but-undrained blob can never be
+    #                       outrun by a drop or a cross-node move
+    SEQ_DONE = 2          # eviction of completed sequences (§5.3 ii)
+    PAGE_BOUNDARY = 3     # extension / yield decisions (§5.3 iii)
+    MODULE_READY = 4      # intra-forward successor enqueued by YIELD
+    REFILL = 5            # ON_REFILL_NODE (§5.1 Alg. 2)
+    LONG_TAIL = 6         # ON_LONG_TAIL -> PARTITION
+    MIGRATE = 7           # opportunistic load balancing
+    NODE_FAILURE = 8      # health monitor (§5.6)
 
 
 @dataclasses.dataclass(order=True)

@@ -186,6 +186,10 @@ class Plan:
     b_moe: int                    # combined MoE batch (COMBINE on MoE)
     offload_kv: bool
     offload_params: bool
+    # staging-buffer budget: capacity of the transient host<->device ring
+    # (memory/buffers.py).  Not just a model input any more — SimEngine's
+    # pipelined stage_appends meters its in-flight KV bytes against this
+    # (the real NodeEngine sizes its gate from the cache leaves directly).
     ring_buffer_bytes: int
     layer_time_s: float
     notes: str = ""

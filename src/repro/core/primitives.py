@@ -103,6 +103,10 @@ def migrate(co: SequenceCoroutine, src_engine, dst_engine) -> None:
     the overhead is accounted by the caller's clock model."""
     assert co.status in (Status.INACTIVE, Status.INIT)
     t0 = time.monotonic()
+    # a staged-but-undrained KV blob (pipelined sync) must land before the
+    # host state crosses nodes — otherwise the moved checkpoint would lag
+    # the coroutine's generated tokens
+    src_engine.drain_appends()
     nbytes = 0
     if src_engine.host_store.has(co.seq_id):
         st = src_engine.host_store.seqs[co.seq_id]

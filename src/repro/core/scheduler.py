@@ -13,23 +13,32 @@ Event loop
 Every phase is a handler registered on a pluggable ``SchedulerPolicy``
 table keyed by ``EventKind``; ``step()`` seeds one round of per-node work
 and then drains ``self.queue`` in EventKind priority order
-(SYNC < SEQ_DONE < PAGE_BOUNDARY < MODULE_READY < REFILL < LONG_TAIL <
-MIGRATE < NODE_FAILURE).  Decode completion *enqueues* its follow-up
-phases instead of inline-calling them, so custom policies can reorder,
-drop or wrap any phase, and cluster-sim / real-engine runs share one code
-path.  Per decode *page* (P tokens, §5.3) the default policy dispatches:
+(SYNC < SYNC_DRAIN < SEQ_DONE < PAGE_BOUNDARY < MODULE_READY < REFILL <
+LONG_TAIL < MIGRATE < NODE_FAILURE).  Decode completion *enqueues* its
+follow-up phases instead of inline-calling them, so custom policies can
+reorder, drop or wrap any phase, and cluster-sim / real-engine runs share
+one code path.  Per decode *page* (P tokens, §5.3) the default policy
+dispatches:
 
   REFILL(tick)   — pre-decode ON_REFILL_NODE, then enqueue MODULE_READY
-  MODULE_READY   — decode one page; enqueue SYNC/SEQ_DONE/PAGE_BOUNDARY/
-                   REFILL/LONG_TAIL for the node
-  SYNC           — flush pending async KV appends (host = source of truth)
-  SEQ_DONE       — YIELD finished sequences, release pages
+  MODULE_READY   — decode one page; enqueue SYNC/SYNC_DRAIN/SEQ_DONE/
+                   PAGE_BOUNDARY/REFILL/LONG_TAIL for the node
+  SYNC           — ISSUE the page's KV gather + async device→host copy
+                   (``stage_appends``; host = source of truth)
+  SYNC_DRAIN     — land in-flight KV blobs, keeping the newest staged
+                   (this page's) in flight so its PCIe copy rides behind
+                   the NEXT page's megastep — the two-stage pipeline that
+                   hides the sync transfer (§5.2/§5.3 overlap)
+  SEQ_DONE       — YIELD finished sequences, release pages (forces a full
+                   drain first: eviction consumes host-store state)
   PAGE_BOUNDARY  — extend page allocation or YIELD (most-progress-first)
   REFILL         — COMBINE waiting sequences into the active batch
   LONG_TAIL      — PARTITION stragglers over idle devices
-  MIGRATE        — rebalance suspended sequences across nodes (FIFO)
-  NODE_FAILURE   — §5.6 recovery: migrate checkpointed sequences to the
-                   least-loaded survivor, recompute the rest
+  MIGRATE        — rebalance suspended sequences across nodes (FIFO;
+                   ``prim.migrate`` drains the source engine first)
+  NODE_FAILURE   — §5.6 recovery: land the failed node's in-flight blobs,
+                   migrate checkpointed sequences to the least-loaded
+                   survivor, recompute the rest
 
 Stream-first results
 --------------------
@@ -44,8 +53,9 @@ whole page as one fused device program capped at ``min(P, max remaining)``
 steps (the on-device done mask absorbs mid-page finishes — that cap IS the
 early page exit) and applies the returned ``(P, max_active)`` token block
 to the coroutines before returning.  The page-boundary handlers therefore
-see fully updated coroutine state and ``sync_appends`` moves the block's
-KV to the host store with one batched gather per page.
+see fully updated coroutine state; ``stage_appends`` issues the block's
+KV as one batched gather + async host copy per page, and the next round's
+``SYNC_DRAIN`` lands it after the following megastep has been dispatched.
 """
 from __future__ import annotations
 
@@ -130,43 +140,66 @@ def default_module_ready(sched: "CoroutineScheduler", ev: Event) -> None:
         return
     active = sched.pending(ev.node, Status.ACTIVE)
     if not active:
+        eng.drain_appends()     # idle node: land any leftover pipeline
         eng.idle_tick()
         return
     before = {c.seq_id: len(c.generated) for c in active}
     eng.decode_page(active, sched.cfg.page_size)
     for co in active:
         sched.emit_token_block(co, before[co.seq_id])
-    for kind in (EventKind.SYNC, EventKind.SEQ_DONE, EventKind.PAGE_BOUNDARY,
-                 EventKind.REFILL, EventKind.LONG_TAIL):
+    for kind in (EventKind.SYNC, EventKind.SYNC_DRAIN, EventKind.SEQ_DONE,
+                 EventKind.PAGE_BOUNDARY, EventKind.REFILL,
+                 EventKind.LONG_TAIL):
         sched.queue.push(kind, ev.node)
 
 
 def default_sync(sched: "CoroutineScheduler", ev: Event) -> None:
-    """(i) Sync — async KV appends -> host store (§5.3 i)."""
+    """(i) Sync — ISSUE the page's KV gather + async host copy (§5.3 i).
+    The blob lands at a later SYNC_DRAIN (pipelined behind the next
+    megastep); the host store stays the single source of truth because
+    every consumer of it drains first."""
     eng = sched.engine(ev.node)
     if eng is None:
         return
     active = sched.pending(ev.node, Status.ACTIVE)
     if active:
-        eng.sync_appends(active)
+        eng.stage_appends(active)
 
 
-def default_seq_done(sched: "CoroutineScheduler", ev: Event) -> None:
-    """(ii) Eviction — finished sequences release device + host pages."""
+def default_sync_drain(sched: "CoroutineScheduler", ev: Event) -> None:
+    """Land in-flight KV blobs, keeping the just-staged page in flight —
+    its device→host copy overlaps the next megastep and is drained by the
+    NEXT round's SYNC_DRAIN (or force-drained by any host-store
+    consumer).  Priority-ordered before SEQ_DONE/MIGRATE/NODE_FAILURE so
+    a queued drain can never be outrun by a queued consumer."""
     eng = sched.engine(ev.node)
     if eng is None:
         return
-    for co in sched.pending(ev.node, Status.ACTIVE):
-        if co.remaining == 0:
-            eng.allocator.free_seq(co.seq_id)
-            eng.free_slot(co)
-            co.slot = None
-            eng.host_store.drop(co.seq_id)
-            co.finish()
-            sched.emit(SeqFinishedEvent(co.seq_id, ev.node,
-                                        finish_reason=co.finish_reason,
-                                        n_generated=len(co.generated),
-                                        sct_s=co.sct()))
+    eng.drain_appends(keep_newest=1)
+
+
+def default_seq_done(sched: "CoroutineScheduler", ev: Event) -> None:
+    """(ii) Eviction — finished sequences release device + host pages.
+    Dropping host-store state consumes it: land every in-flight blob
+    first so a staged window can never resurrect an evicted sequence."""
+    eng = sched.engine(ev.node)
+    if eng is None:
+        return
+    finished = [co for co in sched.pending(ev.node, Status.ACTIVE)
+                if co.remaining == 0]
+    if not finished:
+        return
+    eng.drain_appends()
+    for co in finished:
+        eng.allocator.free_seq(co.seq_id)
+        eng.free_slot(co)
+        co.slot = None
+        eng.host_store.drop(co.seq_id)
+        co.finish()
+        sched.emit(SeqFinishedEvent(co.seq_id, ev.node,
+                                    finish_reason=co.finish_reason,
+                                    n_generated=len(co.generated),
+                                    sct_s=co.sct()))
 
 
 def default_page_boundary(sched: "CoroutineScheduler", ev: Event) -> None:
@@ -246,6 +279,12 @@ def default_node_failure(sched: "CoroutineScheduler", ev: Event) -> None:
     failed = sched.engine(ev.node)
     if failed is None:
         return
+    # Land the failed node's in-flight KV blobs before deciding migrate-
+    # vs-recompute: the copies were issued before the failure (§5.6 "the
+    # host tier survives"), and an undrained window would make a migrated
+    # checkpoint lag co.generated.  (A deployment whose DMA died with the
+    # node re-gathers instead — here the staged arrays are still live.)
+    failed.drain_appends()
     sched.engines = [e for e in sched.engines if e.node_id != ev.node]
     sched.log.append(f"node_failure node={ev.node}")
     if not sched.engines:
@@ -300,6 +339,7 @@ class SchedulerPolicy:
     onto ``scheduler.queue`` and emit stream records via
     ``scheduler.emit``."""
     sync: Handler = default_sync
+    sync_drain: Handler = default_sync_drain
     seq_done: Handler = default_seq_done
     page_boundary: Handler = default_page_boundary
     module_ready: Handler = default_module_ready
@@ -310,6 +350,7 @@ class SchedulerPolicy:
 
     def table(self) -> Dict[EventKind, Handler]:
         t = {EventKind.SYNC: self.sync,
+             EventKind.SYNC_DRAIN: self.sync_drain,
              EventKind.SEQ_DONE: self.seq_done,
              EventKind.PAGE_BOUNDARY: self.page_boundary,
              EventKind.MODULE_READY: self.module_ready,

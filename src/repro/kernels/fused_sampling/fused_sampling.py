@@ -29,9 +29,17 @@ tests/test_fused_sampling.py hold it exactly to ``ref.py``.
 Histogram binning is scatter-free (bucket-index compare against a
 broadcasted iota, then a lane reduction): O(TILE * NB) VPU work per
 tile, but only O(V) HBM traffic per phase — the trade "Mind the Memory
-Gap" calls for in the bandwidth-bound decode regime.  A further step
-(noted, not taken) is parking the whole row in VMEM across phases
-(128k f32 = 512 KB) to collapse the 7 reads of V to one.
+Gap" calls for in the bandwidth-bound decode regime.
+
+VMEM row parking (``park_vmem=True``, the default whenever the row fits
+— 128k f32 = 512 KB): phase 0 copies each logits tile into a (1, V)
+VMEM scratch row and phases 1-6 read from the scratch, collapsing the
+seven HBM reads of the logits to ONE.  The phase-idle inputs stop
+streaming too: each input's BlockSpec index map pins its block while the
+phase doesn't consume it (logits after phase 0, the raw row after phase
+0, the Gumbel row before phase 6), so the pipeline fetches every operand
+from HBM exactly once.  The math is bit-identical to the unparked kernel
+— both are held to ``ref.py`` by the interpret-mode parity tests.
 """
 from __future__ import annotations
 
@@ -59,7 +67,9 @@ _NPH = 7
 
 
 def _kernel(k_ref, p_ref, minp_ref, x_ref, g_ref, *rest,
-            tiles: int, lanes_k: int):
+            tiles: int, lanes_k: int, park: bool):
+    if park:                    # parked logits row is the LAST scratch arg
+        rest, xv = rest[:-1], rest[-1]
     if lanes_k >= 0:
         raw_ref = rest[0]
         outs = rest[1:]
@@ -76,7 +86,18 @@ def _kernel(k_ref, p_ref, minp_ref, x_ref, g_ref, *rest,
     b = pl.program_id(0)
     ph = pl.program_id(1)
     j = pl.program_id(2)
-    x = x_ref[0].astype(jnp.float32)                       # (TILE,)
+    x_in = x_ref[0].astype(jnp.float32)                    # (TILE,)
+    if park:
+        # phase 0 parks each tile in the VMEM row; later phases read the
+        # scratch (x_ref is pinned to block 0 then — its value is only
+        # selected during phase 0, so the stale block is harmless)
+        @pl.when(ph == _PH_STATS)
+        def _park_tile():
+            xv[0, pl.ds(j * TILE, TILE)] = x_in
+        x = jnp.where(ph == _PH_STATS, x_in,
+                      xv[0, pl.ds(j * TILE, TILE)])
+    else:
+        x = x_in
     pos = j * TILE + jax.lax.broadcasted_iota(
         jnp.int32, (TILE, 1), 0)[:, 0]
 
@@ -251,10 +272,12 @@ def _kernel(k_ref, p_ref, minp_ref, x_ref, g_ref, *rest,
 
 def fused_sampling_tpu(logits, gumbel, k, p, min_p, raw=None, *,
                        lp_k: int = 0, with_lanes: bool = False,
-                       interpret: bool = False):
+                       park_vmem: bool = False, interpret: bool = False):
     """logits/gumbel (B, V) f32 with V a multiple of TILE (pad with the
     NEG sentinel / zeros — see ops.fused_sample); k (B,) i32, p/min_p
     (B,) f32 scalar-prefetch rows; raw (B, V) only when ``with_lanes``.
+    ``park_vmem`` parks the logits row in a (1, V) VMEM scratch across
+    the phases (caller checks the row fits — V * 4 bytes of VMEM).
 
     Returns (sampled, greedy, tau, m, l[, m_raw, l_raw[, top_vals,
     top_idx]]).
@@ -269,7 +292,20 @@ def fused_sampling_tpu(logits, gumbel, k, p, min_p, raw=None, *,
     lane = pl.BlockSpec((1, max(lp_k, 1)),
                         lambda bb, ph, jj, kk, pp, mm: (bb, 0))
 
-    in_specs = [row, row] + ([row] if with_lanes else [])
+    def _phase_pinned(active_ph):
+        """Stream the row's tiles only while ``active_ph`` consumes them;
+        every other phase pins the block index so the pipeline does not
+        re-fetch the operand from HBM."""
+        return pl.BlockSpec(
+            (1, TILE),
+            lambda bb, ph, jj, kk, pp, mm: (
+                bb, jnp.where(ph == active_ph, jj, 0)))
+
+    if park_vmem:
+        in_specs = [_phase_pinned(_PH_STATS), _phase_pinned(_PH_SAMPLE)] \
+            + ([_phase_pinned(_PH_STATS)] if with_lanes else [])
+    else:
+        in_specs = [row, row] + ([row] if with_lanes else [])
     out_shapes = [jax.ShapeDtypeStruct((B,), jnp.int32),      # sampled
                   jax.ShapeDtypeStruct((B,), jnp.int32),      # greedy
                   jax.ShapeDtypeStruct((B,), jnp.float32),    # tau
@@ -292,6 +328,8 @@ def fused_sampling_tpu(logits, gumbel, k, p, min_p, raw=None, *,
     if lanes_k > 0:
         scratch += [pltpu.VMEM((1, lanes_k), jnp.float32),
                     pltpu.VMEM((1, lanes_k), jnp.float32)]
+    if park_vmem:
+        scratch += [pltpu.VMEM((1, V), jnp.float32)]   # parked logits row
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -300,7 +338,8 @@ def fused_sampling_tpu(logits, gumbel, k, p, min_p, raw=None, *,
         out_specs=out_specs,
         scratch_shapes=scratch,
     )
-    kernel = functools.partial(_kernel, tiles=tiles, lanes_k=lanes_k)
+    kernel = functools.partial(_kernel, tiles=tiles, lanes_k=lanes_k,
+                               park=park_vmem)
     args = (k.astype(jnp.int32), p.astype(jnp.float32),
             min_p.astype(jnp.float32), logits, gumbel)
     if with_lanes:

@@ -17,13 +17,24 @@ def _pad_rows(x, vp, fill):
         [x, jnp.full((B, vp - V), fill, x.dtype)], axis=1)
 
 
-@partial(jax.jit, static_argnames=("lp_k", "with_lanes", "interpret"))
+# VMEM budget for the parked logits row: park whenever the padded row
+# fits (128k f32 vocab = 512 KiB; the cap leaves headroom for the
+# histogram/lane scratch and double-buffered input tiles)
+PARK_VMEM_LIMIT = 1 << 20
+
+
+@partial(jax.jit,
+         static_argnames=("lp_k", "with_lanes", "park_vmem", "interpret"))
 def fused_sample(logits, gumbel, k, p, min_p, raw=None, *, lp_k: int = 0,
-                 with_lanes: bool = False, interpret: bool = False):
+                 with_lanes: bool = False, park_vmem=None,
+                 interpret: bool = False):
     """Single-pass sample for a (B, V) batch of processed logits.
 
     Pads V up to a TILE multiple with the NEG sentinel (padded tokens
     carry zero probability mass and can never win either argmax).
+    ``park_vmem`` (default: auto — on whenever the padded row fits
+    ``PARK_VMEM_LIMIT``) parks the logits row in VMEM across the kernel's
+    phases so HBM reads it once instead of once per phase.
     Returns a dict with ``sampled``/``greedy`` (B,) i32, ``tau``/``m``/
     ``l`` (B,) f32, plus — when ``with_lanes`` — the raw-logit softmax
     stats ``m_raw``/``l_raw`` and, for ``lp_k > 0``, the ``top_vals``/
@@ -31,12 +42,15 @@ def fused_sample(logits, gumbel, k, p, min_p, raw=None, *, lp_k: int = 0,
     tie-breaking; log-softmax = top_vals - m_raw - log(l_raw)).
     """
     vp = -(-logits.shape[1] // TILE) * TILE
+    if park_vmem is None:
+        park_vmem = vp * 4 <= PARK_VMEM_LIMIT
     args = (_pad_rows(logits.astype(jnp.float32), vp, NEG),
             _pad_rows(gumbel.astype(jnp.float32), vp, 0.0),
             k, p, min_p)
     if with_lanes:
         args += (_pad_rows(raw.astype(jnp.float32), vp, NEG),)
     outs = fused_sampling_tpu(*args, lp_k=lp_k, with_lanes=with_lanes,
+                              park_vmem=bool(park_vmem),
                               interpret=interpret)
     names = ["sampled", "greedy", "tau", "m", "l"]
     if with_lanes:

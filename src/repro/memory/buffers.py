@@ -7,9 +7,14 @@ soon as a module finishes.  Prefill runs a ring of expert/param prefetches
 overlapped with compute and offloads each layer's KV immediately, so at most
 two layers of KV are device-resident.
 
-On CPU this class is exercised as an accounting/scheduling structure (its
-occupancy decisions drive the plan optimizer and the cluster simulator); on
-TPU the same slot discipline would drive async device_put round-robins.
+The same class gates a REAL transfer path: ``NodeEngine`` meters its
+pipelined device→host KV staging (``stage_appends``) through a RingBuffer
+— every in-flight blob reserves a slot, draining releases it, and a stage
+that would overflow the capacity falls back to a synchronous drain (the
+stall the plan optimizer sizes ``ring_buffer_bytes`` against).  The
+timing model (``prefetch``) additionally drives the plan optimizer and
+the cluster simulator; on TPU the same slot discipline would drive async
+device_put round-robins.
 """
 from __future__ import annotations
 
@@ -59,6 +64,20 @@ class RingBuffer:
                 self.slots.remove(s)
                 self.used -= s.nbytes
                 return
+
+    # -- occupancy gate (live backpressure for staged transfers) -----------
+    def can_fit(self, nbytes: int) -> bool:
+        """Would a reservation of ``nbytes`` fit right now?  A blob larger
+        than the whole buffer never fits — callers must fall back to a
+        synchronous (stage-and-drain) transfer for it."""
+        return self.used + nbytes <= self.capacity
+
+    def reserve(self, name: str, nbytes: int):
+        """Claim ``nbytes`` of staging space without the timing model —
+        the live engine's accounting for an in-flight async copy.  Pair
+        with ``release(name)`` when the transfer is drained."""
+        self.slots.append(Slot(name, nbytes))
+        self.used += nbytes
 
 
 @dataclasses.dataclass

@@ -66,6 +66,13 @@ class SimEngine:
         self.busy_s = 0.0
         self.failed = False
         self.slot_owner: List[Optional[int]] = [None] * max_active
+        # pipelined host-KV staging (same two-stage protocol as the real
+        # engine): entries are {"nbytes", "hidden"}; a decode between
+        # stage and drain marks the blob hidden (its transfer overlapped
+        # the compute).  plan.ring_buffer_bytes is the live gate.
+        self._staged: List[Dict] = []
+        self._staged_bytes = 0
+        self.sync_stalls = 0
 
     # ---------------------------------------------------------------- clock
     def clock(self) -> float:
@@ -99,6 +106,8 @@ class SimEngine:
 
     # -------------------------------------------------------------- compute
     def decode_page(self, active: Sequence[SequenceCoroutine], P: int):
+        for e in self._staged:          # this compute hides their transfer
+            e["hidden"] = True
         regular = [c for c in active if not c.partition_group]
         parts = [c for c in active if c.partition_group]
         steps = min(P, max(c.remaining for c in active))
@@ -173,9 +182,41 @@ class SimEngine:
                      for j in range(co.top_logprobs)])
 
     def sync_appends(self, active):
-        # async appends overlap with decode; only the page-boundary barrier
-        # (5-10 ms / 64 tokens cross-node sync, Table 2) costs time
-        self.vclock += 0.007
+        # blocking sync: issue + land in one call (the page-boundary
+        # barrier, 5-10 ms / 64 tokens cross-node sync, Table 2)
+        self.stage_appends(active)
+        self.drain_appends()
+
+    def stage_appends(self, active):
+        """Issue the page's KV transfer; cost is the dispatch only.  The
+        §5.4 plan's ring_buffer_bytes gates in-flight bytes — a stage
+        that would overflow it pays a synchronous drain first (the stall
+        the configuration search sizes the buffer against), and a blob
+        larger than the whole ring degrades to the blocking barrier with
+        no overlap at all — the same fallback ladder as the real
+        engine, so the simulator cannot report transfer hiding a given
+        ring size would not actually deliver."""
+        nbytes = int(len(active) * self.page_size
+                     * kv_bytes_per_token(self.cfg))
+        cap = max(int(self.plan.ring_buffer_bytes), 1)
+        if self._staged_bytes + nbytes > cap:
+            self.sync_stalls += 1
+            self.drain_appends()
+        if self._staged_bytes + nbytes <= cap:
+            self._staged.append({"nbytes": nbytes, "hidden": False})
+            self._staged_bytes += nbytes
+            self.vclock += 0.002
+        else:
+            self.vclock += 0.007    # synchronous: issue + unhidden land
+
+    def drain_appends(self, keep_newest: int = 0):
+        """Land staged blobs: a blob whose transfer overlapped a decode
+        (hidden) pays only the residual barrier; a force-drained one pays
+        the blocking remainder of the Table-2 sync cost."""
+        while len(self._staged) > keep_newest:
+            e = self._staged.pop(0)
+            self._staged_bytes -= e["nbytes"]
+            self.vclock += 0.001 if e["hidden"] else 0.005
 
     def prefill(self, cos: Sequence[SequenceCoroutine]):
         if not cos:
@@ -275,6 +316,7 @@ class Cluster:
         migrate-vs-recompute cost model."""
         eng = self.engines[node]
         eng.failed = True
+        eng.drain_appends()     # land in-flight blobs (§5.6 host tier)
         survivors = [e for e in self.engines if not e.failed]
         assert survivors, "no survivors"
         moved = recomputed = 0

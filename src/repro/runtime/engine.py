@@ -28,9 +28,26 @@ measures).  Ragged pages decompose into chained pow2-sized scan chunks
 executables while never running a wasted masked step.
 
 Host-sync contract: after ``decode_page``, coroutine state (generated/
-last_token/length) is already updated from the block; ``sync_appends``
-then gathers every dirty slot's new KV window in one batched device
-gather → one host transfer → per-page host-store appends.
+last_token/length) is already updated from the block; the page's KV then
+moves to the host store through a two-stage software pipeline —
+``stage_appends`` issues ONE jitted batched gather of every dirty slot's
+new window and starts the device→host copy asynchronously
+(``copy_to_host_async``), snapshotting each slot's ``[synced, length)``
+span at issue time; ``drain_appends`` later materializes the blob into
+per-page host-store appends.  The scheduler drains page N's blob at page
+N+1's SYNC_DRAIN phase, so the PCIe transfer rides behind the next
+megastep instead of blocking the loop (``overlap=False`` restores the
+blocking gather-transfer-append of the seed path; ``sync_appends`` is
+stage+drain in one call).  In-flight staged bytes are metered through a
+real ``memory.buffers.RingBuffer``: a stage that would overflow
+``ring_buffer_bytes`` falls back to a synchronous drain first (counted
+in ``sync_stalls`` — the signal the §5.4 plan sizes the buffer against).
+
+Slot installs (COMBINE/refill) are likewise staged host-side and applied
+in ONE jitted multi-slot scatter — cache leaves, last tokens and lengths
+together — right before the next consumer of device state (decode or
+extract), so refilling n slots costs one dispatch instead of
+``n * (leaves + 2)`` eager scatters.
 
 Supports dense and MoE families (caches {"k","v"}); set
 ``module_granularity=True`` to decode through the Algorithm-1 module
@@ -53,24 +70,31 @@ per-slot eager dispatches.
 from __future__ import annotations
 
 import time
-from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro import sampling as smp
 from repro.core.backend import validate_backend
 from repro.core.coroutine import Phase, SequenceCoroutine, Status
 from repro.core.forward import ModuleRuntime, _lru_get
 from repro.core.primitives import PrimitiveStats
 from repro.memory.allocator import PageAllocator
+from repro.memory.buffers import RingBuffer
 from repro.memory.paged_kv import HostKVStore
 from repro.models import transformer as T
 from repro.models.api import MeshAxes, ModelConfig
 
 _PREFILL_JIT_CAP = 8    # LRU cap on (B, S)-bucketed prefill executables
+_GATHER_JIT_CAP = 16    # LRU cap on (n, W)-bucketed sync-gather executables
+_INSTALL_JIT_CAP = 8    # LRU cap on n-bucketed multi-slot install scatters
+# staging-path PCIe-class bandwidth for the ring buffer's timing model
+# (core/plan.py Hardware.host_link_bw); the live gate only uses occupancy
+_HOST_LINK_BW = 32e9
 # the per-slot sampling-params rows the batched sampler consumes
 _SAMPLE_ROW_KEYS = ("temperature", "top_k", "top_p", "min_p",
                     "repetition_penalty", "presence_penalty",
@@ -83,6 +107,22 @@ _MEGASTEP_JIT_CAP = 32
 
 def _pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
+
+
+class _InFlightSync:
+    """One staged KV blob: the device array whose async device→host copy
+    has been issued, plus everything needed to land it in the host store
+    later — the leaf layout and the per-slot ``(seq_id, start, n, first)``
+    spans snapshotted at issue time (slot reuse after the snapshot cannot
+    corrupt it: the gather already copied the values)."""
+    __slots__ = ("blob", "metas", "snaps", "nbytes", "name")
+
+    def __init__(self, blob, metas, snaps, nbytes, name):
+        self.blob = blob
+        self.metas = metas
+        self.snaps = snaps
+        self.nbytes = nbytes
+        self.name = name
 
 
 def _np_top_k_idx(x: np.ndarray, k: int) -> np.ndarray:
@@ -108,7 +148,8 @@ class NodeEngine:
                  page_size: int = 32, num_devices: int = 8,
                  device_pages: Optional[int] = None,
                  module_granularity: bool = False, b_attn: int = 0,
-                 fused: bool = True, seed: int = 0):
+                 fused: bool = True, overlap: bool = True,
+                 ring_buffer_bytes: Optional[int] = None, seed: int = 0):
         assert cfg.family in ("dense", "moe") and cfg.sliding_window == 0, \
             "mini-engine supports dense/moe caches; see cluster sim for rest"
         self.cfg = cfg
@@ -119,6 +160,7 @@ class NodeEngine:
         self.num_devices = num_devices
         self.page_size = page_size
         self.fused = fused
+        self.overlap = overlap
 
         self.params = T.init_params(cfg, jax.random.PRNGKey(seed))
         self.host_store = HostKVStore(page_size)
@@ -167,6 +209,37 @@ class NodeEngine:
         self.prefill_tokens = 0
         self.d2h_transfers = 0      # device→host copies through _to_host
 
+        # ---- pipelined host-KV staging (stage_appends / drain_appends) ----
+        # stable leaf layout of the concatenated sync blob
+        self._blob_metas = [(name, leaf.shape[3:],
+                             int(np.prod(leaf.shape[3:])) if leaf.shape[3:]
+                             else 1)
+                            for name, leaf in self.cache.items()]
+        self._inflight: Deque[_InFlightSync] = deque()
+        self._gather_cache: "OrderedDict[tuple, object]" = OrderedDict()
+        # the live backpressure gate: worst case one page blob is every
+        # slot dirty for a full page; default capacity = two of those
+        # (pipeline depth 1 + the blob being staged) so steady state
+        # never stalls while a runaway pipeline cannot hoard host RAM
+        page_blob = sum(leaf.dtype.itemsize * leaf.shape[0]
+                        * _pow2(max_active) * _pow2(page_size) * f
+                        for (_, _, f), leaf in zip(self._blob_metas,
+                                                   self.cache.values()))
+        self.ring = RingBuffer(ring_buffer_bytes or 2 * page_blob,
+                               _HOST_LINK_BW)
+        self._sync_tag = 0
+        self.sync_stages = 0        # async-staged blobs
+        self.sync_drains = 0        # blobs landed in the host store
+        self.sync_stalls = 0        # ring-full fallbacks to synchronous drain
+        self.sync_wait_s = 0.0      # wall time blocked materializing blobs
+        self.staged_bytes = 0       # cumulative bytes through the ring
+
+        # ---- batched slot installs (COMBINE/refill) -----------------------
+        # slot -> (cache slices, last_token, length), flushed in one jitted
+        # multi-slot scatter before the next consumer of device state
+        self._pending_install: "OrderedDict[int, tuple]" = OrderedDict()
+        self._install_cache: "OrderedDict[int, object]" = OrderedDict()
+
     # ------------------------------------------------------------- protocol
     def clock(self) -> float:
         return time.monotonic()
@@ -190,24 +263,88 @@ class NodeEngine:
             self.lengths = self.lengths.at[co.slot].set(0)
 
     def extract_slot(self, co: SequenceCoroutine) -> Dict[str, np.ndarray]:
+        self._flush_pending_installs()      # the slot may itself be pending
         s = co.slot
         return {name: np.asarray(leaf[:, s]) for name, leaf in
                 self.cache.items()}
 
     def install_slot(self, co: SequenceCoroutine, slices: Dict[str, np.ndarray]):
-        s = co.slot
+        """Stage a COMBINE resume: the cache/token/length writes are held
+        host-side and applied by ``_flush_pending_installs`` in ONE jitted
+        multi-slot scatter at the next consumer of device state, so a
+        refill installing n slots costs one dispatch instead of
+        ``n * (leaves + 2)`` eager ones (the remaining eager-dispatch tax
+        on slot churn, shared by greedy and sampled paths).  Re-installing
+        the same slot overwrites its pending entry."""
+        self._pending_install[co.slot] = (slices, int(co.last_token),
+                                          int(co.length))
+        self.synced_len[co.seq_id] = co.length
+        self._install_sampling(co)
+
+    def _pad_slot_arr(self, arr: np.ndarray, leaf) -> np.ndarray:
+        """Pad/crop a restored (L, len, ...) slice to the leaf's (L, S, ...)
+        slot shape."""
+        pad = leaf.shape[2] - arr.shape[1]
+        if pad > 0:
+            return np.pad(arr, [(0, 0), (0, pad)]
+                          + [(0, 0)] * (arr.ndim - 2))
+        return arr[:, : leaf.shape[2]]
+
+    def _install_now(self, s: int, slices: Dict[str, np.ndarray],
+                     last_token: int, length: int):
+        """Eager per-slot install — only for slices missing cache leaves
+        (a partial checkpoint must not zero the leaves it omits)."""
         for name, arr in slices.items():
             if name not in self.cache:
                 continue
             leaf = self.cache[name]
-            pad = leaf.shape[2] - arr.shape[1]
-            a = np.pad(arr, [(0, 0), (0, pad)] + [(0, 0)] * (arr.ndim - 2)) \
-                if pad > 0 else arr[:, : leaf.shape[2]]
+            a = self._pad_slot_arr(arr, leaf)
             self.cache[name] = leaf.at[:, s].set(jnp.asarray(a, leaf.dtype))
-        self.tokens = self.tokens.at[s].set(co.last_token)
-        self.lengths = self.lengths.at[s].set(co.length)
-        self.synced_len[co.seq_id] = co.length
-        self._install_sampling(co)
+        self.tokens = self.tokens.at[s].set(last_token)
+        self.lengths = self.lengths.at[s].set(length)
+
+    def _flush_pending_installs(self):
+        """Apply all staged slot installs in one jitted batched scatter
+        (slot counts pow2-padded by repeating the first entry — duplicate
+        identical updates are harmless — so slot churn reuses a handful
+        of executables).  Called before anything reads device slot state
+        (decode, extract, the sync gather)."""
+        if not self._pending_install:
+            return
+        items = list(self._pending_install.items())
+        self._pending_install.clear()
+        names = [m[0] for m in self._blob_metas]
+        full, partial = [], []
+        for s, (slices, tok, ln) in items:
+            dst = full if all(nm in slices for nm in names) else partial
+            dst.append((s, slices, tok, ln))
+        for s, slices, tok, ln in partial:
+            self._install_now(s, slices, tok, ln)
+        if not full:
+            return
+        n = _pow2(len(full))
+        full += [full[0]] * (n - len(full))
+        slot_idx = np.array([s for s, *_ in full], np.int32)
+        toks = np.array([t for _, _, t, _ in full], np.int32)
+        lens = np.array([l for *_, l in full], np.int32)
+        upds = {}
+        for name, leaf in self.cache.items():
+            rows = [np.asarray(self._pad_slot_arr(slices[name], leaf),
+                               leaf.dtype) for _, slices, _, _ in full]
+            upds[name] = np.stack(rows, axis=1)     # (L, n, S, *trail)
+
+        def make():
+            def _apply(cache, tokens, lengths, idx, upd, tok, ln):
+                new = dict(cache)
+                for nm, u in upd.items():
+                    new[nm] = cache[nm].at[:, idx].set(u)
+                return new, tokens.at[idx].set(tok), lengths.at[idx].set(ln)
+            return jax.jit(_apply, donate_argnums=(0, 1, 2))
+        fn = _lru_get(self._install_cache, n, _INSTALL_JIT_CAP, make)
+        self.cache, self.tokens, self.lengths = fn(
+            self.cache, self.tokens, self.lengths, jnp.asarray(slot_idx),
+            {k: jnp.asarray(v) for k, v in upds.items()},
+            jnp.asarray(toks), jnp.asarray(lens))
 
     def _install_sampling(self, co: SequenceCoroutine):
         """Bind a slot's sampling params + re-derived device state.
@@ -298,6 +435,7 @@ class NodeEngine:
         slot's budget).  The per-page ``decode_steps`` counter advances by
         the logical step count, same as the per-token loop, so
         simulator/roofline accounting is unchanged."""
+        self._flush_pending_installs()
         if not active:
             return
         steps = min(P, max(c.remaining for c in active))
@@ -496,58 +634,131 @@ class NodeEngine:
                 break
 
     def sync_appends(self, active: Sequence[SequenceCoroutine]):
-        """Propagate freshly decoded KV entries to the host store (§5.3 i).
+        """Blocking host-KV sync (§5.3 i): stage + drain in one call —
+        the seed path's gather-transfer-append, kept for direct callers
+        and as the measured baseline of the ``--overlap`` benchmark."""
+        self.stage_appends(active)
+        self.drain_appends()
 
-        One batched per-page gather: every dirty slot's new token window
-        (its OWN [synced, length) span, so one freshly combined slot can't
-        inflate the copy for the others) is gathered from the device cache
-        in a single op, flattened into one (L, n_dirty, W, F_total) blob
-        with W = the largest per-slot span (≤ one page in steady state),
-        moved with ONE host transfer, then appended page-by-page into the
-        host store on the CPU side."""
+    def _get_gather(self, n: int, W: int):
+        """Jitted batched dirty-window gather -> one (L, n, W, F_total)
+        blob, bucketed to (pow2 slots, pow2 window) so steady-state page
+        syncs reuse a handful of executables."""
+        names = [m[0] for m in self._blob_metas]
+
+        def make():
+            def _g(cache, slots, pos):
+                parts = []
+                for nm in names:
+                    seg = cache[nm][:, slots, pos]      # (L, n, W, *trail)
+                    parts.append(seg.reshape(seg.shape[0], n, W, -1))
+                return jnp.concatenate(parts, axis=-1)
+            return jax.jit(_g)
+        return _lru_get(self._gather_cache, (n, W), _GATHER_JIT_CAP, make)
+
+    def _gather_dirty(self, active) -> Optional[_InFlightSync]:
+        """Issue the batched gather of every dirty slot's [synced, length)
+        window and snapshot the per-slot spans; advances ``synced_len`` at
+        ISSUE time (the pipeline owns the window from here — a later
+        yield checkpoint supersedes it with identical values, so a stale
+        drain is a harmless rewrite)."""
         assert len({leaf.dtype for leaf in self.cache.values()}) == 1, \
             "batched gather concatenates leaves: mixed dtypes would be " \
             "silently promoted — add a per-dtype blob before relaxing this"
+        self._flush_pending_installs()
         todo = []
         for co in active:
             if co.slot is None:
                 continue
             start = self.synced_len.get(co.seq_id, 0)
-            if not self.host_store.has(co.seq_id):
+            first = not self.host_store.has(co.seq_id)
+            if first:
                 start = 0               # first sync: checkpoint from zero
             if co.length > start:
-                todo.append((co, start))
+                todo.append((co, start, first))
         if not todo:
+            return None
+        n, W = len(todo), int(max(co.length - start
+                                  for co, start, _ in todo))
+        n_pad, W_pad = _pow2(n), _pow2(W)
+        pad = [todo[0]] * (n_pad - n)
+        slots = np.array([[co.slot] for co, _, _ in todo + pad], np.int32)
+        starts = np.array([start for _, start, _ in todo + pad])
+        pos = np.minimum(starts[:, None] + np.arange(W_pad)[None],
+                         self.max_len - 1).astype(np.int32)
+        blob = self._get_gather(n_pad, W_pad)(
+            self.cache, jnp.asarray(slots), jnp.asarray(pos))
+        snaps = []
+        for co, start, first in todo:
+            snaps.append((co.seq_id, start, co.length - start, first))
+            self.synced_len[co.seq_id] = co.length
+        self._sync_tag += 1
+        nbytes = int(np.prod(blob.shape)) * blob.dtype.itemsize
+        return _InFlightSync(blob, self._blob_metas, snaps, nbytes,
+                             f"sync{self._sync_tag}")
+
+    def stage_appends(self, active: Sequence[SequenceCoroutine]):
+        """Issue the page's dirty-window KV gather and start its async
+        device→host copy; the blob rides the ring buffer until
+        ``drain_appends`` lands it.  With ``overlap=False`` (or when the
+        blob cannot fit the ring even after a forced drain) this degrades
+        to the blocking synchronous path."""
+        ent = self._gather_dirty(active)
+        if ent is None:
             return
-        starts = np.array([start for _, start in todo])
-        W = int(max(co.length - start for co, start in todo))
-        slots = jnp.asarray([[co.slot] for co, _ in todo], jnp.int32)
-        pos = jnp.asarray(np.minimum(starts[:, None] + np.arange(W)[None],
-                                     self.max_len - 1), jnp.int32)
-        metas, parts = [], []
-        for name, leaf in self.cache.items():
-            seg = leaf[:, slots, pos]               # (L, n, W, *trail)
-            trail = seg.shape[3:]
-            metas.append((name, trail, int(np.prod(trail)) if trail else 1))
-            parts.append(seg.reshape(seg.shape[0], len(todo), W, -1))
-        blob = self._to_host(jnp.concatenate(parts, axis=-1))
+        if not self.overlap:
+            self._materialize(ent)
+            return
+        if not self.ring.can_fit(ent.nbytes):
+            # backpressure: land everything in flight, then retry the
+            # reservation — the stall the plan optimizer sizes
+            # ring_buffer_bytes against
+            self.sync_stalls += 1
+            self.drain_appends()
+        if self.ring.can_fit(ent.nbytes):
+            self.ring.reserve(ent.name, ent.nbytes)
+            compat.copy_to_host_async(ent.blob)
+            self._inflight.append(ent)
+            self.sync_stages += 1
+            self.staged_bytes += ent.nbytes
+        else:
+            self._materialize(ent)      # blob larger than the whole ring
+
+    def drain_appends(self, keep_newest: int = 0):
+        """Land staged blobs in the host store, oldest first.  The
+        scheduler's SYNC_DRAIN phase keeps the newest blob in flight
+        (``keep_newest=1``) so its copy rides behind the next megastep;
+        every consumer of host-store state (evict / migrate / failure
+        recovery) forces a full drain first."""
+        while len(self._inflight) > keep_newest:
+            ent = self._inflight.popleft()
+            self.ring.release(ent.name)
+            self._materialize(ent)
+            self.sync_drains += 1
+
+    def _materialize(self, ent: _InFlightSync):
+        """Blocking half of the pipeline: wait for the blob's copy (the
+        ONE host transfer for the page's KV) and append it page-by-page
+        into the host store."""
+        t0 = time.perf_counter()
+        blob = self._to_host(ent.blob)
+        self.sync_wait_s += time.perf_counter() - t0
         offs, off = {}, 0
-        for name, trail, f in metas:
+        for name, trail, f in ent.metas:
             offs[name] = (off, off + f)
             off += f
         L = blob.shape[0]
-        for i, (co, start) in enumerate(todo):
-            n = co.length - start
+        for i, (seq_id, start, n, first) in enumerate(ent.snaps):
+            if not first and not self.host_store.has(seq_id):
+                continue    # dropped (evicted) after issue: do not resurrect
             slices = {}
-            for name, trail, _ in metas:
+            for name, trail, _ in ent.metas:
                 lo, hi = offs[name]
-                win = blob[:, i, :n, lo:hi]
-                slices[name] = win.reshape((L, n) + trail)
-            if self.host_store.has(co.seq_id):
-                self.host_store.append_tokens(co.seq_id, slices, start)
+                slices[name] = blob[:, i, :n, lo:hi].reshape((L, n) + trail)
+            if self.host_store.has(seq_id):
+                self.host_store.append_tokens(seq_id, slices, start)
             else:
-                self.host_store.checkpoint(co.seq_id, slices, co.length)
-            self.synced_len[co.seq_id] = co.length
+                self.host_store.checkpoint(seq_id, slices, start + n)
 
     def prefill(self, cos: Sequence[SequenceCoroutine]):
         """Prefill a batch of INIT coroutines; leaves them INACTIVE with KV

@@ -41,8 +41,8 @@ def test_event_queue_priority_order_under_contention():
 
 def test_scheduler_drains_queue_in_priority_order():
     """One scheduler round on a live node dispatches refill -> decode ->
-    sync -> evict -> extend -> refill -> longtail, sequenced purely by the
-    queue's EventKind priorities (no inline phase calls)."""
+    sync -> sync_drain -> evict -> extend -> refill -> longtail, sequenced
+    purely by the queue's EventKind priorities (no inline phase calls)."""
     order = []
 
     def wrap(label, fn):
@@ -54,6 +54,7 @@ def test_scheduler_drains_queue_in_priority_order():
     base = SchedulerPolicy()
     pol = SchedulerPolicy(
         sync=wrap("sync", base.sync),
+        sync_drain=wrap("sync_drain", base.sync_drain),
         seq_done=wrap("seq_done", base.seq_done),
         page_boundary=wrap("page_boundary", base.page_boundary),
         module_ready=wrap("module_ready", base.module_ready),
@@ -67,8 +68,8 @@ def test_scheduler_drains_queue_in_priority_order():
                                policy=pol)
     sched.submit([[2, 3, 4]] * 2, [10] * 2)
     sched.step()
-    assert order == ["refill", "module_ready", "sync", "seq_done",
-                     "page_boundary", "refill", "long_tail"]
+    assert order == ["refill", "module_ready", "sync", "sync_drain",
+                     "seq_done", "page_boundary", "refill", "long_tail"]
 
 
 def test_every_eventkind_has_a_default_handler():

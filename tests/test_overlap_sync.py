@@ -1,0 +1,267 @@
+"""Pipelined host-KV DMA (stage_appends / drain_appends / SYNC_DRAIN).
+
+The two-stage sync pipeline must be TRANSPARENT: identical generated
+tokens and bitwise-identical host-store contents vs the blocking sync it
+replaces, while actually overlapping — the gather is issued before the
+next megastep and the blob materializes after it.  Every consumer of
+host-store state (evict, migrate, failure recovery) forces a drain
+first, and the ring-buffer gate degrades to synchronous sync when the
+staged bytes would overflow it.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import primitives as prim
+from repro.core.coroutine import SequenceCoroutine, Status
+from repro.core.events import EventKind
+from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
+from repro.runtime.engine import NodeEngine
+
+
+def _mk_engine(cfg, overlap, **kw):
+    kw.setdefault("max_active", 3)
+    kw.setdefault("max_len", 128)
+    kw.setdefault("page_size", 8)
+    return NodeEngine(cfg, seed=0, overlap=overlap, **kw)
+
+
+def _mk_cos(prompts, max_out):
+    return [SequenceCoroutine(seq_id=i, prompt=list(p), max_out=mo)
+            for i, (p, mo) in enumerate(zip(prompts, max_out))]
+
+
+def _host_state(store):
+    """Materialized host-store contents for bitwise comparison."""
+    out = {}
+    for sid, st in sorted(store.seqs.items()):
+        out[sid] = (st.length,
+                    {k: [np.asarray(p) for p in ps]
+                     for k, ps in sorted(st.pages.items())},
+                    {k: np.asarray(v) for k, v in sorted(st.whole.items())})
+    return out
+
+
+def _assert_same_host_state(a, b):
+    assert set(a) == set(b)
+    for sid in a:
+        la, pa, wa = a[sid]
+        lb, pb, wb = b[sid]
+        assert la == lb, f"seq {sid}: length {la} != {lb}"
+        assert set(pa) == set(pb) and set(wa) == set(wb)
+        for k in pa:
+            assert len(pa[k]) == len(pb[k]), (sid, k)
+            for i, (x, y) in enumerate(zip(pa[k], pb[k])):
+                assert np.array_equal(x, y), f"seq {sid} leaf {k} page {i}"
+        for k in wa:
+            assert np.array_equal(wa[k], wb[k]), (sid, k)
+
+
+def _drive_direct(eng, prompts, max_out, pages, P=8):
+    """Engine-level page loop: pipelined engines stage + drain(keep=1)
+    like the scheduler's SYNC/SYNC_DRAIN phases; blocking engines pay
+    sync_appends.  Fully drained at the end so host stores compare."""
+    cos = _mk_cos(prompts, max_out)
+    eng.prefill(cos)
+    prim.combine(cos, eng)
+    for _ in range(pages):
+        active = [c for c in cos if c.remaining > 0]
+        if not active:
+            break
+        eng.decode_page(active, P)
+        if eng.overlap:
+            eng.stage_appends(active)
+            eng.drain_appends(keep_newest=1)
+        else:
+            eng.sync_appends(active)
+    eng.drain_appends()
+    return cos
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "phi3_5_moe"])
+def test_token_and_host_store_parity(arch, rng):
+    """Pipelined vs blocking sync: identical tokens AND bitwise-identical
+    host-store pages, including ragged finishes mid-page."""
+    cfg = reduced_config(arch)
+    prompts = [list(rng.integers(2, cfg.vocab_size, int(n)))
+               for n in rng.integers(4, 12, 3)]
+    max_out = [21, 9, 14]
+    eng_o = _mk_engine(cfg, True)
+    cos_o = _drive_direct(eng_o, prompts, max_out, pages=4)
+    eng_b = _mk_engine(cfg, False)
+    cos_b = _drive_direct(eng_b, prompts, max_out, pages=4)
+    assert [c.generated for c in cos_o] == [c.generated for c in cos_b]
+    assert eng_o.sync_stages > 0, "pipelined path never staged"
+    _assert_same_host_state(_host_state(eng_o.host_store),
+                            _host_state(eng_b.host_store))
+
+
+def test_scheduler_parity_with_combine_and_yield(rng):
+    """Full scheduler runs (eviction pressure -> yield/combine round
+    trips) produce identical token streams with overlap on and off."""
+    cfg = reduced_config("llama3_2_1b")
+    prompts = [list(rng.integers(2, cfg.vocab_size, int(n)))
+               for n in rng.integers(4, 12, 7)]
+    max_out = [12, 5, 9, 20, 7, 3, 16]
+
+    def run(overlap):
+        eng = _mk_engine(cfg, overlap)
+        sched = CoroutineScheduler([eng], SchedulerConfig(page_size=8))
+        ids = sched.submit(prompts, max_out)
+        rep = sched.run(max_ticks=500)
+        assert rep["completed"] == len(prompts)
+        return [sched.cos[i].generated for i in ids]
+
+    assert run(True) == run(False)
+
+
+def test_gather_issued_before_next_megastep_drained_after():
+    """Transfer-spy: in the scheduler's steady state, page N's blob is
+    STAGED before page N+1's megastep is dispatched and MATERIALIZED
+    after it — the §5.2/§5.3 compute/transfer overlap."""
+    cfg = reduced_config("llama3_2_1b")
+    eng = _mk_engine(cfg, True)
+    trace = []
+    orig_decode = eng.decode_page
+    orig_stage = eng.stage_appends
+    orig_mat = eng._materialize
+
+    def spy_decode(active, P):
+        trace.append(("decode", None))
+        return orig_decode(active, P)
+
+    def spy_stage(active):
+        orig_stage(active)
+        if eng._inflight:
+            trace.append(("stage", eng._inflight[-1].name))
+
+    def spy_mat(ent):
+        trace.append(("drain", ent.name))
+        return orig_mat(ent)
+
+    eng.decode_page = spy_decode
+    eng.stage_appends = spy_stage
+    eng._materialize = spy_mat
+    sched = CoroutineScheduler([eng], SchedulerConfig(page_size=8))
+    sched.submit([[2, 3, 4, 5]] * 3, [24] * 3)
+    rep = sched.run(max_ticks=300)
+    assert rep["completed"] == 3
+
+    decode_i = [i for i, (kind, _) in enumerate(trace) if kind == "decode"]
+    assert len(decode_i) >= 3
+    staged = {name: i for i, (kind, name) in enumerate(trace)
+              if kind == "stage"}
+    drained = {name: i for i, (kind, name) in enumerate(trace)
+               if kind == "drain"}
+    assert set(staged) == set(drained) and staged, trace
+    hidden = 0
+    for name, si in staged.items():
+        di = drained[name]
+        assert si < di, f"{name} drained before staged"
+        # a blob is hidden when a megastep was dispatched between its
+        # stage and its drain
+        if any(si < d < di for d in decode_i):
+            hidden += 1
+    # every blob except the final page's (force-drained when the batch
+    # finishes) must ride behind the next megastep
+    assert hidden >= len(staged) - 1, trace
+
+
+def test_drain_lands_before_evict_and_migrate():
+    """Any host_store.drop (eviction or migration source) must observe an
+    EMPTY in-flight pipeline — a staged window may never be outrun by a
+    consumer of host-store state."""
+    cfg = reduced_config("llama3_2_1b")
+    engs = [_mk_engine(cfg, True, node_id=0), _mk_engine(cfg, True, node_id=1)]
+    for eng in engs:
+        orig_drop = eng.host_store.drop
+
+        def spy_drop(seq_id, _eng=eng, _orig=orig_drop):
+            assert not _eng._inflight, \
+                f"drop(seq {seq_id}) with {len(_eng._inflight)} in flight"
+            return _orig(seq_id)
+        eng.host_store.drop = spy_drop
+    sched = CoroutineScheduler(engs, SchedulerConfig(page_size=8))
+    ids = sched.submit([[2, 3, 4, 5]] * 8, [10, 4, 16, 7, 12, 5, 9, 14])
+    # skew the load so the MIGRATE handler actually fires
+    for i in ids:
+        sched.cos[i].node = 0
+    rep = sched.run(max_ticks=500)
+    assert rep["completed"] == 8
+    assert any("migrate" in line for line in sched.log), sched.log
+
+
+def test_node_failure_with_inflight_blob_parity():
+    """NODE_FAILURE while a staged blob is in flight: the blob lands
+    before recovery consumes host-store state, and the recovered batch
+    finishes with the exact tokens of an identically-timed blocking
+    run."""
+    cfg = reduced_config("llama3_2_1b")
+
+    def run(overlap):
+        engs = [_mk_engine(cfg, overlap, node_id=0, max_active=2),
+                _mk_engine(cfg, overlap, node_id=1, max_active=2)]
+        sched = CoroutineScheduler(engs, SchedulerConfig(page_size=8))
+        ids = sched.submit([[2, 3, 4, 5]] * 4, [24] * 4)
+        for _ in range(2):
+            sched.step()
+        if overlap:
+            # the failure must race a genuinely in-flight blob
+            assert engs[0]._inflight, "no in-flight blob at failure time"
+        sched.queue.push(EventKind.NODE_FAILURE, node=0)
+        rep = sched.run(max_ticks=500)
+        assert rep["completed"] == 4
+        return [sched.cos[i].generated for i in ids]
+
+    assert run(True) == run(False)
+
+
+def test_ring_backpressure_falls_back_to_blocking(rng):
+    """A ring buffer too small for even one blob: every stage degrades to
+    the synchronous path (stall counted) and parity still holds."""
+    cfg = reduced_config("llama3_2_1b")
+    prompts = [list(rng.integers(2, cfg.vocab_size, int(n)))
+               for n in rng.integers(4, 10, 3)]
+    max_out = [18, 11, 14]
+    eng_t = _mk_engine(cfg, True, ring_buffer_bytes=1)
+    cos_t = _drive_direct(eng_t, prompts, max_out, pages=4)
+    eng_b = _mk_engine(cfg, False)
+    cos_b = _drive_direct(eng_b, prompts, max_out, pages=4)
+    assert eng_t.sync_stalls > 0, "tiny ring never stalled"
+    assert eng_t.sync_stages == 0, "tiny ring should not admit a blob"
+    assert [c.generated for c in cos_t] == [c.generated for c in cos_b]
+    _assert_same_host_state(_host_state(eng_t.host_store),
+                            _host_state(eng_b.host_store))
+
+
+def test_sim_engine_stage_drain_protocol():
+    """SimEngine conforms: stage/drain cost accounting, hidden-transfer
+    discount when a decode overlaps the staged blob, and the plan's
+    ring_buffer_bytes gating staged bytes."""
+    from repro.core import plan as plan_lib
+    from repro.runtime.cluster import SimEngine, fixed_workload
+
+    cfg = reduced_config("llama3_2_1b")
+    hw = plan_lib.Hardware()
+    eng = SimEngine(cfg, hw, max_active=4, max_len=512, page_size=64)
+    wl = fixed_workload(4, 16, 128)
+    sched = CoroutineScheduler([eng], SchedulerConfig(page_size=64))
+    sched.submit(wl.prompts, wl.max_out)
+    rep = sched.run(max_ticks=2000)
+    assert rep["completed"] == 4
+    assert not eng._staged, "sim pipeline left blobs in flight"
+
+    # forced stall: gate capacity below one page's staged bytes
+    tiny_plan = plan_lib.Plan(b_attn=4, b_moe=4, offload_kv=False,
+                              offload_params=False, ring_buffer_bytes=1,
+                              layer_time_s=1e-4)
+    eng2 = SimEngine(cfg, hw, max_active=4, max_len=512, page_size=64,
+                     plan=tiny_plan)
+    cos = _mk_cos(wl.prompts[:2], [64, 64])
+    eng2.prefill(cos)
+    prim.combine(cos, eng2)
+    for _ in range(3):
+        eng2.decode_page(cos, 64)
+        eng2.stage_appends(cos)
+        eng2.drain_appends(keep_newest=1)
+    assert eng2.sync_stalls > 0

@@ -45,6 +45,19 @@ member                    role
                           migrate, failure recovery) must force a full
                           drain first
 ``prefill(cos)``          prefill INIT coroutines, checkpoint, leave INACTIVE
+``heartbeat()``           emit this round's ``Heartbeat`` (or None when the
+                          node is dead / its beat is suppressed) — the
+                          scheduler feeds it to the ``HealthMonitor`` every
+                          round (§5.6)
+``transfer(kind, fn)``    run one risky host transfer (stage/drain/install/
+                          migrate) through the fault injector + bounded
+                          exponential-backoff retry envelope; raises
+                          ``TransferDeadLetter`` after the retry budget
+``faults``                per-node ``NodeFaults`` view (None = no injection)
+``retry_policy``          ``RetryPolicy`` governing ``transfer``
+``transfer_stats``        dict: retries / timeouts / dead_letters counters
+``dead_lettered``         flag the scheduler polls after every dispatch to
+                          escalate a dead-lettered node to NODE_FAILURE
 ========================  ==================================================
 """
 from __future__ import annotations
@@ -55,11 +68,11 @@ from typing import (Any, Dict, List, Optional, Protocol, Sequence,
 PROTOCOL_METHODS = (
     "clock", "idle_tick", "acquire_slot", "free_slot", "extract_slot",
     "install_slot", "reconfigure_partition", "decode_page", "sync_appends",
-    "stage_appends", "drain_appends", "prefill",
+    "stage_appends", "drain_appends", "prefill", "heartbeat", "transfer",
 )
 PROTOCOL_ATTRS = (
     "node_id", "max_active", "num_devices", "host_store", "allocator",
-    "stats",
+    "stats", "faults", "retry_policy", "transfer_stats", "dead_lettered",
 )
 
 
@@ -73,6 +86,10 @@ class ExecutionBackend(Protocol):
     host_store: Any
     allocator: Any
     stats: Any
+    faults: Any
+    retry_policy: Any
+    transfer_stats: Dict[str, int]
+    dead_lettered: bool
 
     def clock(self) -> float: ...
 
@@ -97,6 +114,10 @@ class ExecutionBackend(Protocol):
     def drain_appends(self, keep_newest: int = 0) -> None: ...
 
     def prefill(self, cos: Sequence) -> None: ...
+
+    def heartbeat(self) -> Optional[Any]: ...
+
+    def transfer(self, kind: str, fn: Any) -> Any: ...
 
 
 def validate_backend(backend):

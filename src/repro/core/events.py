@@ -119,3 +119,15 @@ class PrimitiveEvent(RuntimeRecord):
     primitive: str = ""
     detail: Any = None
     custom_id: Optional[str] = None
+
+
+@dataclasses.dataclass
+class HealthEvent(RuntimeRecord):
+    """The health subsystem acted on a node: the monitor declared it dead
+    (``reason='heartbeat'``), a transfer dead-lettered out of its retry
+    budget (``reason='dead_letter'``), or an external caller demanded a
+    failover (``reason='external'``).  ``seq_id`` is -1 — this record is
+    about a node, not a sequence."""
+    reason: str = "heartbeat"
+    detail: Any = None
+    custom_id: Optional[str] = None

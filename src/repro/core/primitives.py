@@ -111,8 +111,18 @@ def migrate(co: SequenceCoroutine, src_engine, dst_engine) -> None:
     if src_engine.host_store.has(co.seq_id):
         st = src_engine.host_store.seqs[co.seq_id]
         nbytes = st.nbytes()
-        dst_engine.host_store.seqs[co.seq_id] = st
-        src_engine.host_store.drop(co.seq_id)
+
+        def _move():
+            dst_engine.host_store.seqs[co.seq_id] = st
+            src_engine.host_store.drop(co.seq_id)
+        # the inter-node blob move is a guarded transfer when the backend
+        # provides the envelope (retry/backoff; a dead-letter propagates —
+        # the scheduler's failure handlers fall back to recompute)
+        xfer = getattr(src_engine, "transfer", None)
+        if callable(xfer):
+            xfer("migrate", _move)
+        else:
+            _move()
     co.node = dst_engine.node_id
     co.migrations += 1
     co.fire("on_migrate", dst_engine.node_id)

@@ -40,6 +40,19 @@ dispatches:
                    migrate checkpointed sequences to the least-loaded
                    survivor, recompute the rest
 
+Health-driven recovery (§5.6)
+-----------------------------
+Each round starts by arming the engines' injected fault views
+(``FaultPlan`` ticks are scheduler rounds — chaos runs replay from a
+seed) and collecting one ``heartbeat()`` per engine into the
+``HealthMonitor``; ``dead_after`` consecutive missed beats enqueue
+NODE_FAILURE from inside the loop — no external monitor process.  A
+transfer that dead-letters out of its retry budget (``engine.
+dead_lettered``) escalates the node to NODE_FAILURE *inline*,
+immediately after the dispatch that tripped it, so a node with a corrupt
+slot never decodes another page.  ``policy.recovery_choice`` hooks the
+migrate-vs-recompute cost model into the failure handler.
+
 Stream-first results
 --------------------
 ``stream()`` / ``events()`` yield typed records (``TokenBlockEvent`` /
@@ -67,9 +80,11 @@ from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
 from repro.core import primitives as prim
 from repro.core.backend import validate_backend
 from repro.core.coroutine import Phase, SequenceCoroutine, Status
-from repro.core.events import (Event, EventKind, EventQueue, PrimitiveEvent,
-                               RuntimeRecord, SeqFinishedEvent,
-                               TokenBlockEvent)
+from repro.core.events import (Event, EventKind, EventQueue, HealthEvent,
+                               PrimitiveEvent, RuntimeRecord,
+                               SeqFinishedEvent, TokenBlockEvent)
+from repro.runtime.failure import HealthMonitor
+from repro.runtime.faults import FaultPlan, TransferDeadLetter
 from repro.sampling.params import SamplingParams
 
 logger = logging.getLogger(__name__)
@@ -264,7 +279,13 @@ def default_migrate(sched: "CoroutineScheduler", ev: Event) -> None:
                    or sched.pending(hi, Status.INIT))
         if movable:
             co = movable[0]
-            prim.migrate(co, sched.engine(hi), sched.engine(lo))
+            try:
+                prim.migrate(co, sched.engine(hi), sched.engine(lo))
+            except TransferDeadLetter:
+                # the blob never moved (host stores are consistent); the
+                # post-dispatch dead-letter sweep escalates node `hi`
+                sched.log.append(f"migrate dead-letter seq={co.seq_id}")
+                return
             sched.log.append(f"migrate seq={co.seq_id} {hi}->{lo}")
             sched.emit(PrimitiveEvent(co.seq_id, lo, primitive="migrate",
                                       detail=(hi, lo)))
@@ -273,9 +294,13 @@ def default_migrate(sched: "CoroutineScheduler", ev: Event) -> None:
 def default_node_failure(sched: "CoroutineScheduler", ev: Event) -> None:
     """§5.6 recovery: drop the failed engine from rotation; sequences with
     a host checkpoint MIGRATE to the least-loaded survivor, everything
-    whose state died with the node recomputes from the prompt.  (The
-    cluster simulator's ``Cluster.fail_node`` layers the migrate-vs-
-    recompute *cost model* on top of the same decision.)"""
+    whose state died with the node recomputes from the prompt.
+
+    ``policy.recovery_choice`` (the migrate-vs-recompute cost model —
+    ``Cluster`` plugs in the §5.4 performance-model version) can demote an
+    eligible migrate to a recompute; it can never promote an ineligible
+    one — only INACTIVE/INIT sequences with a host checkpoint have state
+    that is safe to move."""
     failed = sched.engine(ev.node)
     if failed is None:
         return
@@ -285,6 +310,14 @@ def default_node_failure(sched: "CoroutineScheduler", ev: Event) -> None:
     # checkpoint lag co.generated.  (A deployment whose DMA died with the
     # node re-gathers instead — here the staged arrays are still live.)
     failed.drain_appends()
+    # a dead-letter raised during that drain is already handled (the blob
+    # was abandoned and its sequences will recompute below) — this node is
+    # being recovered right now, so clear the escalation flag
+    failed.dead_lettered = False
+    ring = getattr(failed, "ring", None)
+    if ring is not None:
+        ring.reset()    # abandoned blobs must not hold staging space
+    sched.health.mark_failed(ev.node)
     sched.engines = [e for e in sched.engines if e.node_id != ev.node]
     sched.log.append(f"node_failure node={ev.node}")
     if not sched.engines:
@@ -298,14 +331,25 @@ def default_node_failure(sched: "CoroutineScheduler", ev: Event) -> None:
         return sum(1 for c in sched.cos.values()
                    if c.node == e.node_id and not c.done)
 
+    choose = sched.policy.recovery_choice
     for co in sched.cos.values():
         if co.node != ev.node or co.done:
             continue
         dst = min(sched.engines, key=load)
         co.partition_group = None       # the failed node's devices are gone
+        migrated = False
         if (co.status in (Status.INACTIVE, Status.INIT)
-                and failed.host_store.has(co.seq_id)):
-            prim.migrate(co, failed, dst)
+                and failed.host_store.has(co.seq_id)
+                and (choose is None
+                     or choose(sched, co, failed, dst) == "migrate")):
+            try:
+                prim.migrate(co, failed, dst)
+                migrated = True
+            except TransferDeadLetter:
+                failed.dead_lettered = False    # already recovering
+                sched.log.append(
+                    f"failover migrate dead-letter seq={co.seq_id}")
+        if migrated:
             sched.emit(PrimitiveEvent(co.seq_id, dst.node_id,
                                       primitive="migrate", detail="failover"))
         else:
@@ -337,7 +381,12 @@ class SchedulerPolicy:
     Replace any field to customize one phase without forking the loop —
     handlers receive ``(scheduler, event)`` and may push follow-up events
     onto ``scheduler.queue`` and emit stream records via
-    ``scheduler.emit``."""
+    ``scheduler.emit``.
+
+    ``recovery_choice`` is the §5.6 migrate-vs-recompute cost-model hook
+    consulted by ``default_node_failure`` for every eligible sequence:
+    ``(sched, co, failed_engine, dst_engine) -> "migrate" | "recompute"``
+    (None = always migrate when eligible)."""
     sync: Handler = default_sync
     sync_drain: Handler = default_sync_drain
     seq_done: Handler = default_seq_done
@@ -347,6 +396,7 @@ class SchedulerPolicy:
     long_tail: Handler = default_long_tail
     migrate: Handler = default_migrate
     node_failure: Handler = default_node_failure
+    recovery_choice: Optional[Callable] = None
 
     def table(self) -> Dict[EventKind, Handler]:
         t = {EventKind.SYNC: self.sync,
@@ -365,7 +415,9 @@ class SchedulerPolicy:
 
 class CoroutineScheduler:
     def __init__(self, engines: Sequence, config: SchedulerConfig = None,
-                 policy: SchedulerPolicy = None):
+                 policy: SchedulerPolicy = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 health: Optional[HealthMonitor] = None):
         self.engines = [validate_backend(e) for e in engines]
         self.cfg = config or SchedulerConfig()
         self.policy = policy or SchedulerPolicy()
@@ -377,6 +429,23 @@ class CoroutineScheduler:
         self.ticks = 0
         self._t0: Optional[float] = None
         self._outbox: List[RuntimeRecord] = []
+        # ---- §5.6 robustness: fault plan + live health monitoring --------
+        self.fault_plan = fault_plan
+        if fault_plan is not None:
+            for e in self.engines:
+                if getattr(e, "faults", None) is None:
+                    e.faults = fault_plan.node_view(e.node_id)
+        # default monitor counts missed beats per scheduler round
+        # (interval_s=None: per-node clocks — SimEngine vclocks, wall
+        # time — are never compared against each other)
+        self.health = health or HealthMonitor(0, interval_s=None,
+                                              dead_after=3)
+        self.health.on_failure = self._on_health_failure
+        # every engine ever in rotation — failed nodes keep contributing
+        # their transfer/fault counters to report()
+        self._all_engines: List = list(self.engines)
+        self.health_failovers = 0       # NODE_FAILUREs from missed beats
+        self.dead_letter_failovers = 0  # NODE_FAILUREs from dead letters
 
     # ------------------------------------------------------------------ API
     def submit(self, prompts: Sequence[Sequence[int]],
@@ -477,18 +546,77 @@ class CoroutineScheduler:
         if len(self.engines) > 1:
             self.queue.push(EventKind.MIGRATE)
 
+    def _advance_faults(self) -> None:
+        """Arm every engine's injected faults scheduled at this round —
+        the event boundary the FaultPlan is keyed to."""
+        for e in list(self.engines):
+            f = getattr(e, "faults", None)
+            if f is not None:
+                f.advance(self.ticks)
+
+    def _collect_heartbeats(self) -> None:
+        """Once per round: every engine in rotation reports to the health
+        monitor (§5.6).  A missing beat (dead/suppressed node) counts a
+        miss; ``dead_after`` consecutive misses fire ``_on_health_failure``
+        which enqueues NODE_FAILURE itself.  Collection never dispatches —
+        the failure event rides the normal priority drain."""
+        for e in list(self.engines):
+            if e not in self._all_engines:
+                self._all_engines.append(e)     # elastic scale-up
+            self.health.ensure_node(e.node_id)
+            if self.health.failed[e.node_id]:
+                continue
+            hb = e.heartbeat()
+            if hb is None:
+                self.health.miss(e.node_id)
+            else:
+                self.health.report(hb)
+
+    def _on_health_failure(self, node: int) -> None:
+        """HealthMonitor callback: a node stopped heartbeating — escalate
+        to the §5.6 NODE_FAILURE recovery path."""
+        self.health_failovers += 1
+        self.log.append(f"health_failure node={node}")
+        self.emit(HealthEvent(-1, node, reason="heartbeat",
+                              detail="missed heartbeats"))
+        self.queue.push(EventKind.NODE_FAILURE, node, payload="health")
+
+    def _escalate_dead_letters(self) -> Iterator[RuntimeRecord]:
+        """A transfer exhausted its retry budget during the last dispatch:
+        escalate the owning node to NODE_FAILURE IMMEDIATELY (inline
+        dispatch, not a queue push) — a node with a corrupt slot or a lost
+        KV blob must not decode another page, or a garbage sequence could
+        hit a stop token and finish before a queued low-priority
+        NODE_FAILURE gets dispatched."""
+        for e in list(self.engines):
+            if getattr(e, "dead_lettered", False):
+                e.dead_lettered = False
+                self.dead_letter_failovers += 1
+                self.health.mark_failed(e.node_id)
+                self.log.append(f"dead_letter node={e.node_id}")
+                self.emit(HealthEvent(-1, e.node_id, reason="dead_letter",
+                                      detail=dict(e.transfer_stats)))
+                yield from self.dispatch(Event(kind=EventKind.NODE_FAILURE,
+                                               node=e.node_id,
+                                               payload="dead_letter"))
+
+    def _drain_queue(self) -> Iterator[RuntimeRecord]:
+        while self.queue:
+            yield from self.dispatch(self.queue.pop())
+            yield from self._escalate_dead_letters()
+
     def _step_events(self) -> Iterator[RuntimeRecord]:
         if self._t0 is None:
             self._t0 = min((e.clock() for e in self.engines), default=0.0)
+        self._advance_faults()
+        self._collect_heartbeats()
         # Externally-pushed events (NODE_FAILURE from a health monitor,
         # custom policy work) drain BEFORE this round's work is seeded —
         # a failed node must not be refilled/decoded one last time just
         # because NODE_FAILURE's dispatch priority trails the others.
-        while self.queue:
-            yield from self.dispatch(self.queue.pop())
+        yield from self._drain_queue()
         self._seed_round()
-        while self.queue:
-            yield from self.dispatch(self.queue.pop())
+        yield from self._drain_queue()
         self.ticks += 1
 
     def step(self) -> List[RuntimeRecord]:
@@ -536,10 +664,7 @@ class CoroutineScheduler:
         """Compat shim (tests/tools): one node's full
         refill -> decode -> page-boundary cycle through the event queue."""
         self.queue.push(EventKind.REFILL, node, payload=_TICK)
-        recs: List[RuntimeRecord] = []
-        while self.queue:
-            recs += self.dispatch(self.queue.pop())
-        return recs
+        return list(self._drain_queue())
 
     # ------------------------------------------------------------- reporting
     def report(self) -> Dict:
@@ -554,6 +679,17 @@ class CoroutineScheduler:
         for i, e in enumerate(self.engines):
             stats[f"node{i}"] = {"counts": dict(e.stats.counts),
                                  "bytes": dict(e.stats.bytes_moved)}
+        xfer = {"retries": 0, "timeouts": 0, "dead_letters": 0}
+        for e in self._all_engines:
+            for k in xfer:
+                xfer[k] += getattr(e, "transfer_stats", {}).get(k, 0)
+        robustness = {
+            "health_failovers": self.health_failovers,
+            "dead_letter_failovers": self.dead_letter_failovers,
+            "failed_nodes": sorted(n for n, f in self.health.failed.items()
+                                   if f),
+            "transfer": xfer,
+        }
         return {
             "bct_s": t1 - t0,
             "ticks": self.ticks,
@@ -562,5 +698,6 @@ class CoroutineScheduler:
             "total": len(self.cos),
             "mean_sct_s": sum(scts) / len(scts) if scts else 0.0,
             "primitives": stats,
+            "robustness": robustness,
             "log_tail": self.log[-20:],
         }

@@ -79,6 +79,13 @@ class RingBuffer:
         self.slots.append(Slot(name, nbytes))
         self.used += nbytes
 
+    def reset(self):
+        """Drop every reservation (failed-node teardown: the in-flight
+        blobs it metered were abandoned, not drained, so their space must
+        not stay claimed forever)."""
+        self.slots.clear()
+        self.used = 0
+
 
 @dataclasses.dataclass
 class DeviceMemoryPlan:

@@ -74,10 +74,15 @@ class BatchMaster:
     the coroutine scheduler, streams results as they complete."""
 
     def __init__(self, engines: Sequence, sched_cfg: SchedulerConfig = None,
-                 oversubscribe: float = 4.0):
+                 oversubscribe: float = 4.0, policy=None, fault_plan=None):
         self.engines = list(engines)
         self.sched_cfg = sched_cfg or SchedulerConfig()
         self.oversubscribe = oversubscribe
+        # robustness passthrough (§5.6): a SchedulerPolicy (e.g. with a
+        # recovery_choice hook) and/or a seeded FaultPlan applied to every
+        # scheduler this master builds
+        self.policy = policy
+        self.fault_plan = fault_plan
         self.batches: Dict[str, BatchObject] = {}
         # per-batch working state, dropped at _finalize (only the
         # BatchObject survives a finished batch)
@@ -117,7 +122,9 @@ class BatchMaster:
         bo.request_counts["completed"] = 0
         bo.request_counts["failed"] = 0
         reqs = self._requests[bid]
-        sched = CoroutineScheduler(self.engines, self.sched_cfg)
+        sched = CoroutineScheduler(self.engines, self.sched_cfg,
+                                   policy=self.policy,
+                                   fault_plan=self.fault_plan)
         self._scheds[bid] = sched
         ids = sched.submit([r.prompt for r in reqs],
                            [r.max_tokens for r in reqs],
@@ -188,6 +195,13 @@ class BatchMaster:
                     for row in co.top_token_logprobs]
         return {"custom_id": req.custom_id, "response": resp,
                 "status_code": 200 if co.done else 504}
+
+    def result_row(self, bid: str, seq_id: int) -> Optional[Dict[str, Any]]:
+        """The finished result row for one in-flight sequence, or None if
+        it has not finished (or the batch is already finalized).  This is
+        what a write-ahead consumer (``runtime/ledger.py``) journals the
+        moment the ``SeqFinishedEvent`` comes off the stream."""
+        return self._rows.get(bid, {}).get(seq_id)
 
     def retrieve(self, bid: str) -> BatchObject:
         return self.batches[bid]

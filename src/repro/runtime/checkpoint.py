@@ -64,12 +64,21 @@ def restore(path: str, *, mmap: bool = True,
         if shard_filter is not None and not shard_filter(name):
             continue
         fp = os.path.join(path, info["file"])
+        dtype = np.dtype(info["dtype"])
+        expect = dtype.itemsize * int(np.prod(info["shape"], dtype=np.int64))
+        actual = os.path.getsize(fp)
+        if actual != expect:
+            raise ValueError(
+                f"checkpoint leaf '{name}' is corrupt: {info['file']} is "
+                f"{actual} bytes but manifest dtype={info['dtype']} "
+                f"shape={tuple(info['shape'])} requires {expect} — the "
+                f"checkpoint is truncated or was written by a different "
+                f"config")
         if mmap:
-            arr = np.memmap(fp, dtype=np.dtype(info["dtype"]), mode="r",
+            arr = np.memmap(fp, dtype=dtype, mode="r",
                             shape=tuple(info["shape"]))
         else:
-            arr = np.fromfile(fp, dtype=np.dtype(info["dtype"])).reshape(
-                info["shape"])
+            arr = np.fromfile(fp, dtype=dtype).reshape(info["shape"])
         flat[name] = arr
     return flat, meta["extra"]
 

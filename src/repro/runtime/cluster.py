@@ -26,11 +26,16 @@ import numpy as np
 from repro.core import plan as plan_lib
 from repro.core.backend import validate_backend
 from repro.core.coroutine import Phase, SequenceCoroutine, Status
+from repro.core.events import EventKind, PrimitiveEvent
 from repro.core.primitives import PrimitiveStats
-from repro.core.scheduler import CoroutineScheduler, SchedulerConfig
+from repro.core.scheduler import (CoroutineScheduler, SchedulerConfig,
+                                  SchedulerPolicy)
 from repro.memory.allocator import PageAllocator
 from repro.memory.paged_kv import HostKVStore
 from repro.models.api import ModelConfig
+from repro.runtime.failure import DeviceStatus, Heartbeat
+from repro.runtime.faults import (FaultPlan, NodeFaults, RetryPolicy,
+                                  TransferDeadLetter, guarded_transfer)
 
 
 def kv_bytes_per_token(cfg: ModelConfig) -> float:
@@ -47,7 +52,9 @@ class SimEngine:
                  max_active: int = 64, max_len: int = 16384,
                  page_size: int = 64, plan: Optional[plan_lib.Plan] = None,
                  partition_efficiency: float = 0.7,
-                 reconfig_s: float = 7.0):
+                 reconfig_s: float = 7.0,
+                 faults: Optional[NodeFaults] = None,
+                 retry_policy: Optional[RetryPolicy] = None):
         self.cfg = cfg
         self.hw = hw
         self.node_id = node_id
@@ -73,6 +80,15 @@ class SimEngine:
         self._staged: List[Dict] = []
         self._staged_bytes = 0
         self.sync_stalls = 0
+        # §5.6 robustness: fault injection + guarded-transfer accounting
+        # (identical surface to NodeEngine — same FaultPlan drives both)
+        self.faults = faults
+        self.retry_policy = retry_policy or RetryPolicy()
+        self.transfer_stats = {"retries": 0, "timeouts": 0, "dead_letters": 0}
+        self.dead_lettered = False
+        self.oom_rejections = 0
+        self.straggler_steps = 0
+        self.abandoned_blobs = 0
 
     # ---------------------------------------------------------------- clock
     def clock(self) -> float:
@@ -82,7 +98,31 @@ class SimEngine:
         self.vclock += 1e-3
 
     # ------------------------------------------------------------- protocol
+    def heartbeat(self) -> Optional[Heartbeat]:
+        """Liveness beat on the node's VIRTUAL clock.  The scheduler's
+        monitor counts missed beats (interval_s=None) — per-node vclocks
+        are never compared against each other."""
+        if self.failed or (self.faults is not None and (
+                self.faults.dead or self.faults.heartbeat_suppressed())):
+            return None
+        return Heartbeat(self.node_id, self.vclock,
+                         [DeviceStatus(d) for d in range(self.num_devices)])
+
+    def transfer(self, kind: str, fn):
+        """Guarded transfer; retry backoff advances the virtual clock
+        instead of sleeping."""
+        return guarded_transfer(self, kind, fn, on_backoff=self._backoff)
+
+    def _backoff(self, dt: float):
+        self.vclock += dt
+
     def acquire_slot(self, co) -> Optional[int]:
+        if self.faults is not None:
+            if self.faults.dead:
+                return None
+            if self.faults.oom_active():
+                self.oom_rejections += 1
+                return None
         for s, owner in enumerate(self.slot_owner):
             if owner is None:
                 self.slot_owner[s] = co.seq_id
@@ -99,13 +139,21 @@ class SimEngine:
         return {}   # simulated: the host store tracks metadata only
 
     def install_slot(self, co, slices):
-        pass
+        # the simulated install is free, but it still passes through the
+        # guarded-transfer envelope so injected install faults exercise
+        # the same retry/dead-letter path as the real engine
+        try:
+            self.transfer("install", lambda: None)
+        except TransferDeadLetter:
+            pass        # scheduler escalates via the dead_lettered flag
 
     def reconfigure_partition(self, co, group):
         self.vclock += self.reconfig_s          # paper Table 2: 5-10 s
 
     # -------------------------------------------------------------- compute
     def decode_page(self, active: Sequence[SequenceCoroutine], P: int):
+        if self.faults is not None and self.faults.dead:
+            return              # zombie: no compute until failover
         for e in self._staged:          # this compute hides their transfer
             e["hidden"] = True
         regular = [c for c in active if not c.partition_group]
@@ -126,6 +174,11 @@ class SimEngine:
             t_part = max(t_part,
                          steps * t1 / max(g * self.partition_efficiency, 1.0))
         dt = max(t_reg, t_part)
+        if self.faults is not None:
+            f = self.faults.straggler_factor()
+            if f > 1.0:
+                self.straggler_steps += steps
+                dt *= f         # same tokens, just slower — determinism
         self.vclock += dt
         self.busy_s += dt
         for c in active:
@@ -203,10 +256,23 @@ class SimEngine:
             self.sync_stalls += 1
             self.drain_appends()
         if self._staged_bytes + nbytes <= cap:
+            try:
+                self.transfer("stage", lambda: None)
+            except TransferDeadLetter:
+                self.abandoned_blobs += 1   # sim KV is metadata-only:
+                return                      # nothing to drop, just escalate
             self._staged.append({"nbytes": nbytes, "hidden": False})
             self._staged_bytes += nbytes
             self.vclock += 0.002
         else:
+            # blob larger than the ring: synchronous stage + unhidden land.
+            # Still a real d2h copy, so it rides the same guarded-drain
+            # envelope the real engine's forced-synchronous path takes.
+            try:
+                self.transfer("drain", lambda: None)
+            except TransferDeadLetter:
+                self.abandoned_blobs += 1
+                return
             self.vclock += 0.007    # synchronous: issue + unhidden land
 
     def drain_appends(self, keep_newest: int = 0):
@@ -216,9 +282,16 @@ class SimEngine:
         while len(self._staged) > keep_newest:
             e = self._staged.pop(0)
             self._staged_bytes -= e["nbytes"]
+            try:
+                self.transfer("drain", lambda: None)
+            except TransferDeadLetter:
+                self.abandoned_blobs += 1
+                continue
             self.vclock += 0.001 if e["hidden"] else 0.005
 
     def prefill(self, cos: Sequence[SequenceCoroutine]):
+        if self.faults is not None and self.faults.dead:
+            return              # zombie: coroutines stay INIT for recovery
         if not cos:
             return
         toks = sum(c.prompt_len for c in cos)
@@ -290,7 +363,8 @@ class Cluster:
                  nodes: int, devices_per_node: int = 8,
                  max_active: int = 64, max_len: int = 16384,
                  page_size: int = 64,
-                 sched_cfg: Optional[SchedulerConfig] = None):
+                 sched_cfg: Optional[SchedulerConfig] = None,
+                 fault_plan: Optional[FaultPlan] = None):
         self.cfg = cfg
         self.hw = hw
         plan = plan_lib.search_plan(cfg, hw, ctx=max_len // 2, new_tokens=1,
@@ -300,8 +374,14 @@ class Cluster:
                                   max_active=max_active, max_len=max_len,
                                   page_size=page_size, plan=plan)
                         for i in range(nodes)]
+        self._inter_node_bw = 25e9
+        # the §5.6 migrate-vs-recompute cost model rides the scheduler's
+        # recovery_choice policy hook — ONE recovery code path (the
+        # event-loop NODE_FAILURE handler) for sim and real engines
+        policy = SchedulerPolicy(recovery_choice=self._recovery_choice)
         self.sched = CoroutineScheduler(
-            self.engines, sched_cfg or SchedulerConfig(page_size=page_size))
+            self.engines, sched_cfg or SchedulerConfig(page_size=page_size),
+            policy=policy, fault_plan=fault_plan)
 
     def run(self, wl: Workload, max_ticks: int = 200000) -> Dict:
         self.sched.submit(wl.prompts, wl.max_out)
@@ -311,39 +391,39 @@ class Cluster:
         return rep
 
     # ---- §5.6 failure recovery ------------------------------------------
+    def _recovery_choice(self, sched, co, failed, dst) -> str:
+        """Migrate-vs-recompute cost model (the policy hook the scheduler
+        consults per eligible sequence): KV transfer time over the
+        inter-node link vs re-prefill time from the performance model.
+        A chosen migrate also bills the transfer to the destination's
+        virtual clock."""
+        kv_bytes = co.length * kv_bytes_per_token(self.cfg)
+        t_migrate = kv_bytes / self._inter_node_bw
+        t_recompute = plan_lib.step_time(
+            self.cfg, self.hw, dst.plan, 1, max(co.length, 1),
+            max(co.length, 1))
+        if t_migrate < t_recompute:
+            dst.vclock += t_migrate
+            return "migrate"
+        return "recompute"
+
     def fail_node(self, node: int, *, inter_node_bw: float = 25e9) -> Dict:
-        """Kill a node; recover its sequences onto survivors using the
-        migrate-vs-recompute cost model."""
+        """Kill a node NOW: pushes NODE_FAILURE through the scheduler's
+        event-loop handler — the same §5.6 recovery path a health-monitor
+        declaration or a dead-lettered transfer takes — with this
+        cluster's cost model deciding migrate-vs-recompute per sequence."""
         eng = self.engines[node]
         eng.failed = True
-        eng.drain_appends()     # land in-flight blobs (§5.6 host tier)
-        survivors = [e for e in self.engines if not e.failed]
-        assert survivors, "no survivors"
-        moved = recomputed = 0
-        for co in list(self.sched.cos.values()):
-            if co.node != node or co.done:
-                continue
-            dst = min(survivors, key=lambda e: len(
-                self.sched.pending(e.node_id, Status.INACTIVE)))
-            kv_bytes = co.length * kv_bytes_per_token(self.cfg)
-            t_migrate = kv_bytes / inter_node_bw
-            t_recompute = plan_lib.step_time(
-                self.cfg, self.hw, dst.plan, 1, co.length, co.length)
-            if eng.host_store.has(co.seq_id) and t_migrate < t_recompute:
-                # host snapshot survives on the paper's remote checkpoint
-                # tier; we model the transfer cost
-                dst.host_store.seqs[co.seq_id] = eng.host_store.seqs[co.seq_id]
-                dst.vclock += t_migrate
-                co.status = Status.INACTIVE
-                moved += 1
-            else:
-                co.status = Status.INIT      # re-prefill from the prompt
-                co.generated.clear()
-                co.length = 0
-                recomputed += 1
-            co.slot = None
-            co.node = dst.node_id
-        self.sched.engines = survivors
+        self._inter_node_bw = inter_node_bw
+        self.sched.health.mark_failed(node)
+        self.sched.queue.push(EventKind.NODE_FAILURE, node,
+                              payload="external")
+        recs = list(self.sched._drain_queue())
+        moved = sum(1 for r in recs if isinstance(r, PrimitiveEvent)
+                    and r.primitive == "migrate" and r.detail == "failover")
+        recomputed = sum(1 for r in recs if isinstance(r, PrimitiveEvent)
+                         and r.primitive == "recompute"
+                         and r.detail == "failover")
         return {"migrated": moved, "recomputed": recomputed}
 
     # ---- elasticity -------------------------------------------------------

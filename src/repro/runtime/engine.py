@@ -54,6 +54,19 @@ Supports dense and MoE families (caches {"k","v"}); set
 runtime (per-sub-batch attention + COMBINE before MoE), which fuses the
 same way via ``ModuleRuntime.forward_decode_page``.
 
+Robustness (§5.6): the engine emits a ``heartbeat()`` each scheduler
+round and routes its risky host transfers — the staged d2h copy issue
+("stage"), blob materialization ("drain"), the batched install scatter
+("install") and migrate blob moves ("migrate") — through ``transfer``,
+the bounded-exponential-backoff retry envelope of ``runtime/faults.py``.
+A transfer that exhausts its retry budget dead-letters: the lost blob's
+host-store entries are dropped (``_abandon_blob`` — a lagging checkpoint
+must never feed a migrate) and the scheduler escalates the node to
+NODE_FAILURE.  An injected ``NodeFaults`` view (``faults=``) makes the
+engine honor a deterministic FaultPlan: death/oom refuse admissions and
+compute, stale windows suppress heartbeats, transfer faults exercise the
+retry path — all keyed to scheduler rounds, hence replayable.
+
 Sampling: when any active coroutine carries non-default SamplingParams,
 ``decode_page`` switches to the sampled megastep variant — same fused
 scan with the per-slot PRNG position and penalty counts riding the carry
@@ -88,6 +101,9 @@ from repro.memory.buffers import RingBuffer
 from repro.memory.paged_kv import HostKVStore
 from repro.models import transformer as T
 from repro.models.api import MeshAxes, ModelConfig
+from repro.runtime.failure import DeviceStatus, Heartbeat
+from repro.runtime.faults import (NodeFaults, RetryPolicy,
+                                  TransferDeadLetter, guarded_transfer)
 
 _PREFILL_JIT_CAP = 8    # LRU cap on (B, S)-bucketed prefill executables
 _GATHER_JIT_CAP = 16    # LRU cap on (n, W)-bucketed sync-gather executables
@@ -149,7 +165,9 @@ class NodeEngine:
                  device_pages: Optional[int] = None,
                  module_granularity: bool = False, b_attn: int = 0,
                  fused: bool = True, overlap: bool = True,
-                 ring_buffer_bytes: Optional[int] = None, seed: int = 0):
+                 ring_buffer_bytes: Optional[int] = None, seed: int = 0,
+                 faults: Optional[NodeFaults] = None,
+                 retry_policy: Optional[RetryPolicy] = None):
         assert cfg.family in ("dense", "moe") and cfg.sliding_window == 0, \
             "mini-engine supports dense/moe caches; see cluster sim for rest"
         self.cfg = cfg
@@ -167,6 +185,15 @@ class NodeEngine:
         total_pages = device_pages or (max_active * max_len // page_size * 2)
         self.allocator = PageAllocator(total_pages, page_size)
         self.stats = PrimitiveStats()
+
+        # ---- robustness (§5.6): fault injection + guarded transfers -------
+        self.faults = faults                    # NodeFaults view or None
+        self.retry_policy = retry_policy or RetryPolicy()
+        self.transfer_stats = {"retries": 0, "timeouts": 0, "dead_letters": 0}
+        self.dead_lettered = False      # scheduler escalates to NODE_FAILURE
+        self.oom_rejections = 0         # admissions refused by an oom fault
+        self.straggler_steps = 0        # decode steps run under a straggler
+        self.abandoned_blobs = 0        # staged blobs lost to dead-letters
 
         # device slot arrays
         self.cache = T.init_cache(cfg, max_active, max_len)
@@ -247,7 +274,29 @@ class NodeEngine:
     def idle_tick(self):
         pass
 
+    def heartbeat(self) -> Optional[Heartbeat]:
+        """This round's liveness beat for the scheduler's HealthMonitor.
+        A dead or heartbeat-suppressed node yields None — the monitor
+        counts the miss and declares failure after ``dead_after`` in a
+        row."""
+        if self.faults is not None and (
+                self.faults.dead or self.faults.heartbeat_suppressed()):
+            return None
+        return Heartbeat(self.node_id, self.clock(),
+                         [DeviceStatus(d) for d in range(self.num_devices)])
+
+    def transfer(self, kind: str, fn):
+        """Run one risky host transfer through the retry/timeout/dead-
+        letter envelope (ExecutionBackend.transfer)."""
+        return guarded_transfer(self, kind, fn)
+
     def acquire_slot(self, co: SequenceCoroutine) -> Optional[int]:
+        if self.faults is not None:
+            if self.faults.dead:
+                return None             # zombie node admits nothing
+            if self.faults.oom_active():
+                self.oom_rejections += 1
+                return None
         if not self.allocator.can_admit(2):
             return None
         for s, owner in enumerate(self.slot_owner):
@@ -341,10 +390,18 @@ class NodeEngine:
                 return new, tokens.at[idx].set(tok), lengths.at[idx].set(ln)
             return jax.jit(_apply, donate_argnums=(0, 1, 2))
         fn = _lru_get(self._install_cache, n, _INSTALL_JIT_CAP, make)
-        self.cache, self.tokens, self.lengths = fn(
-            self.cache, self.tokens, self.lengths, jnp.asarray(slot_idx),
-            {k: jnp.asarray(v) for k, v in upds.items()},
-            jnp.asarray(toks), jnp.asarray(lens))
+        try:
+            out = self.transfer("install", lambda: fn(
+                self.cache, self.tokens, self.lengths, jnp.asarray(slot_idx),
+                {k: jnp.asarray(v) for k, v in upds.items()},
+                jnp.asarray(toks), jnp.asarray(lens)))
+        except TransferDeadLetter:
+            # the staged installs are lost and their slots hold stale
+            # data; the scheduler sees ``dead_lettered`` and escalates to
+            # NODE_FAILURE, whose recovery recomputes the affected
+            # sequences from their prompts
+            return
+        self.cache, self.tokens, self.lengths = out
 
     def _install_sampling(self, co: SequenceCoroutine):
         """Bind a slot's sampling params + re-derived device state.
@@ -435,12 +492,18 @@ class NodeEngine:
         slot's budget).  The per-page ``decode_steps`` counter advances by
         the logical step count, same as the per-token loop, so
         simulator/roofline accounting is unchanged."""
+        if self.faults is not None and self.faults.dead:
+            return                      # zombie: no compute until failover
         self._flush_pending_installs()
         if not active:
             return
         steps = min(P, max(c.remaining for c in active))
         if steps <= 0:
             return
+        if self.faults is not None and self.faults.straggler_factor() > 1.0:
+            # a real node can't be slowed deterministically — count the
+            # affected steps so tests/telemetry see the straggler window
+            self.straggler_steps += steps
         sampled = any(not c.sampling.is_greedy_default for c in active)
         want_lp = [c for c in active if c.logprobs]
         lp_k = max(c.top_logprobs for c in want_lp) if want_lp else None
@@ -716,8 +779,13 @@ class NodeEngine:
             self.sync_stalls += 1
             self.drain_appends()
         if self.ring.can_fit(ent.nbytes):
+            try:
+                self.transfer("stage",
+                              lambda: compat.copy_to_host_async(ent.blob))
+            except TransferDeadLetter:
+                self._abandon_blob(ent)
+                return
             self.ring.reserve(ent.name, ent.nbytes)
-            compat.copy_to_host_async(ent.blob)
             self._inflight.append(ent)
             self.sync_stages += 1
             self.staged_bytes += ent.nbytes
@@ -741,8 +809,13 @@ class NodeEngine:
         ONE host transfer for the page's KV) and append it page-by-page
         into the host store."""
         t0 = time.perf_counter()
-        blob = self._to_host(ent.blob)
-        self.sync_wait_s += time.perf_counter() - t0
+        try:
+            blob = self.transfer("drain", lambda: self._to_host(ent.blob))
+        except TransferDeadLetter:
+            self._abandon_blob(ent)
+            return
+        finally:
+            self.sync_wait_s += time.perf_counter() - t0
         offs, off = {}, 0
         for name, trail, f in ent.metas:
             offs[name] = (off, off + f)
@@ -760,6 +833,19 @@ class NodeEngine:
             else:
                 self.host_store.checkpoint(seq_id, slices, start + n)
 
+    def _abandon_blob(self, ent: _InFlightSync):
+        """A staged blob was lost to a dead-lettered transfer.  Its
+        sequences' host checkpoints now lag their coroutines' generated
+        streams, so a later migrate would resume from CORRUPT state —
+        drop their host-store entries entirely; the NODE_FAILURE recovery
+        this dead-letter escalates to will recompute them from their
+        prompts (bitwise-identical tokens, §5.6)."""
+        self.abandoned_blobs += 1
+        for seq_id, _start, _n, _first in ent.snaps:
+            if self.host_store.has(seq_id):
+                self.host_store.drop(seq_id)
+            self.synced_len.pop(seq_id, None)
+
     def prefill(self, cos: Sequence[SequenceCoroutine]):
         """Prefill a batch of INIT coroutines; leaves them INACTIVE with KV
         checkpointed to the host store (paper Fig. 7 prefill flow).
@@ -767,6 +853,8 @@ class NodeEngine:
         Executables are bucketed to (pow2 batch, pow2 sequence) and held in
         a small LRU so long mixed workloads can't accumulate one jit per
         exact (B, S)."""
+        if self.faults is not None and self.faults.dead:
+            return          # zombie: coroutines stay INIT for recovery
         if not cos:
             return
         maxlen = max(c.prompt_len for c in cos)

@@ -2,9 +2,23 @@
 
 Per-node heartbeats carry every device's status; a node missing
 ``dead_after`` consecutive heartbeats is declared failed and its sequences
-are recovered by the migrate-vs-recompute cost model (the performance model
-estimates both and picks the faster path — implemented in
-runtime/cluster.py::Cluster.fail_node).
+are recovered by the migrate-vs-recompute cost model (``recovery_choice``,
+wired into the scheduler's NODE_FAILURE handler as a policy hook).
+
+The monitor supports two detection modes, used together or alone:
+
+* **missed-beat counting** (always on): the scheduler collects heartbeats
+  once per round via ``ExecutionBackend.heartbeat``; an engine that fails
+  to produce one accrues a miss, and ``dead_after`` *consecutive* misses
+  declare the node dead.  This is clock-free, so it works across
+  SimEngine's per-node virtual clocks (which are NOT comparable to each
+  other) exactly as well as on real nodes.
+* **wall-clock staleness** (``interval_s`` not None): a healthy report
+  also arms a timestamp; any node whose last-ok timestamp lags the
+  reporting clock by more than ``dead_after * interval_s`` is declared
+  dead.  ``last_ok`` is seeded lazily at the *first observation* of each
+  node — seeding to 0.0 would declare every other node dead on the first
+  real wall-clock report (time.time() >> 0).
 """
 from __future__ import annotations
 
@@ -36,27 +50,89 @@ class Heartbeat:
 
 
 class HealthMonitor:
-    def __init__(self, nodes: int, *, interval_s: float = 5.0,
+    """Declares nodes dead from missed/unhealthy heartbeats.
+
+    ``interval_s=None`` disables the wall-clock staleness check and
+    leaves only consecutive-miss counting (the scheduler's default: its
+    rounds are the clock)."""
+
+    def __init__(self, nodes: int, *, interval_s: Optional[float] = 5.0,
                  dead_after: int = 3):
         self.interval = interval_s
         self.dead_after = dead_after
-        self.last_ok: Dict[int, float] = {n: 0.0 for n in range(nodes)}
+        # None = never observed; seeded at first report so a live wall
+        # clock can't compare against an epoch-zero default.
+        self.last_ok: Dict[int, Optional[float]] = {
+            n: None for n in range(nodes)}
+        self.missed: Dict[int, int] = {n: 0 for n in range(nodes)}
         self.failed: Dict[int, bool] = {n: False for n in range(nodes)}
         self.on_failure: Optional[Callable[[int], None]] = None
 
+    def ensure_node(self, node: int) -> None:
+        """Start tracking a node added after construction (elastic
+        scale-up)."""
+        if node not in self.failed:
+            self.last_ok[node] = None
+            self.missed[node] = 0
+            self.failed[node] = False
+
     def report(self, hb: Heartbeat):
+        """One heartbeat arrived.  Healthy beats clear the miss counter;
+        unhealthy beats (a sick device) count as misses."""
+        self.ensure_node(hb.node)
+        if self.failed[hb.node]:
+            return
         if hb.healthy:
+            if self.last_ok[hb.node] is None:
+                # first observation: also seed every never-seen peer so
+                # relative staleness is measured from a common origin,
+                # not from 0.0
+                for n, t0 in self.last_ok.items():
+                    if t0 is None:
+                        self.last_ok[n] = hb.t
             self.last_ok[hb.node] = hb.t
+            self.missed[hb.node] = 0
+        else:
+            self._miss(hb.node)
         self._check(hb.t)
 
+    def miss(self, node: int, now: Optional[float] = None) -> None:
+        """No heartbeat arrived for ``node`` this round (the scheduler's
+        per-round collection calls this when an engine returns None)."""
+        self.ensure_node(node)
+        if self.failed[node]:
+            return
+        self._miss(node)
+        if now is not None:
+            self._check(now)
+
+    def _miss(self, node: int) -> None:
+        self.missed[node] += 1
+        if self.missed[node] >= self.dead_after:
+            self._declare_failed(node)
+
     def _check(self, now: float):
+        if self.interval is None:
+            return
         for n, t_ok in self.last_ok.items():
-            if self.failed[n]:
+            if self.failed[n] or t_ok is None:
                 continue
             if now - t_ok > self.dead_after * self.interval:
-                self.failed[n] = True
-                if self.on_failure is not None:
-                    self.on_failure(n)
+                self._declare_failed(n)
+
+    def _declare_failed(self, node: int) -> None:
+        if self.failed.get(node):
+            return
+        self.failed[node] = True
+        if self.on_failure is not None:
+            self.on_failure(node)
+
+    def mark_failed(self, node: int) -> None:
+        """Administrative failure (dead-letter escalation, operator
+        action): mark dead WITHOUT firing on_failure — the caller owns
+        the NODE_FAILURE event."""
+        self.ensure_node(node)
+        self.failed[node] = True
 
     def alive(self) -> List[int]:
         return [n for n, f in self.failed.items() if not f]

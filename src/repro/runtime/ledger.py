@@ -1,0 +1,220 @@
+"""Crash-resumable job ledger: write-ahead output log for batch jobs (§5.6).
+
+``runtime/checkpoint.py`` snapshots *engine* state (params, sequence pool,
+host KV) — enough to warm-restart a process that shut down cleanly.  This
+module covers the other half of preemption tolerance: a **job-level
+write-ahead ledger** that survives a SIGKILL mid-batch.  It is the
+"crash-resumable progress ledger" the ROADMAP's million-sequence streaming
+driver calls for: at that scale a batch runs for days and WILL be
+preempted; recomputing finished sequences on every restart makes the job
+quadratic.
+
+Design
+------
+One append-only jsonl file, fsync'd per record, three record kinds:
+
+``{"kind": "meta", "version": 1, ...}``
+    header written when the ledger is created.
+``{"kind": "submit", "custom_id": ..., "n": ...}``
+    the job's request manifest, written before any work starts (so a
+    resume can detect a changed request set).
+``{"kind": "output", "custom_id": ..., "row": {...}}``
+    one finished request's full result row, appended the moment its
+    ``SeqFinishedEvent`` lands — the write-ahead part: a request is
+    "finished" iff its output record is durably in the ledger.
+
+Crash semantics:
+
+* A SIGKILL between records loses at most the in-flight request(s) — they
+  re-run on resume.  Finished rows are never recomputed (the acceptance
+  bar: zero recompute of finished sequences).
+* A SIGKILL mid-write leaves a torn trailing line; ``JobLedger.open``
+  truncates it (the record never committed — its request re-runs).
+* **Exactly-once outputs**: ``record_output`` refuses duplicates
+  (first-wins by ``custom_id``), so a crash after the write but before
+  the scheduler advanced cannot double-emit a row, and a resumed run
+  re-streaming a finished id is a no-op.
+
+Determinism is what makes resume *correct*, not just convenient: greedy
+decode and the token-addressable fold_in sampled stream are bitwise
+reproducible across batch composition, so the rows a resumed run computes
+for the unfinished remainder are identical to what the uninterrupted run
+would have produced — the combined output file is byte-for-byte the same.
+
+``run_resumable`` packages the protocol: load ledger → skip finished →
+submit the remainder → append each finish as it lands → return all rows
+in input order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, IO, List, Optional, Sequence
+
+from repro.core.events import SeqFinishedEvent
+
+LEDGER_VERSION = 1
+
+
+class LedgerError(RuntimeError):
+    pass
+
+
+class JobLedger:
+    """Append-only jsonl write-ahead ledger for one batch job."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh: Optional[IO[str]] = None
+        self.submitted: List[str] = []      # custom_ids in submit order
+        self.finished: Dict[str, Dict[str, Any]] = {}   # custom_id -> row
+        self.meta: Dict[str, Any] = {}
+        self.torn_records = 0
+
+    # ------------------------------------------------------------------ io
+    def open(self) -> "JobLedger":
+        """Load any existing records (tolerating a torn trailing line from
+        a mid-write SIGKILL, which is truncated away) and open the file
+        for appending.  Returns self."""
+        if os.path.exists(self.path):
+            self._load()
+        dirn = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(dirn, exist_ok=True)
+        fresh = not os.path.exists(self.path)
+        self._fh = open(self.path, "a")
+        if fresh or not self.meta:
+            self._append({"kind": "meta", "version": LEDGER_VERSION})
+        return self
+
+    def _load(self) -> None:
+        with open(self.path, "rb") as f:
+            data = f.read()
+        # a torn trailing line (no final newline, or unparseable) never
+        # committed: drop it AND truncate the file so the next append
+        # starts on a clean line instead of corrupting two records
+        keep = len(data)
+        if data and not data.endswith(b"\n"):
+            keep = data.rfind(b"\n") + 1
+            self.torn_records += 1
+        for line in data[:keep].splitlines():
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                self.torn_records += 1      # interior corruption: skip
+                continue
+            kind = rec.get("kind")
+            if kind == "meta":
+                self.meta = rec
+                if rec.get("version", 1) > LEDGER_VERSION:
+                    raise LedgerError(
+                        f"ledger {self.path} written by a newer version "
+                        f"({rec.get('version')} > {LEDGER_VERSION})")
+            elif kind == "submit":
+                self.submitted.append(rec["custom_id"])
+            elif kind == "output":
+                # first-wins: a duplicate append (crash between fsync and
+                # scheduler advance) must not change the emitted row
+                self.finished.setdefault(rec["custom_id"], rec["row"])
+        if keep < len(data):
+            with open(self.path, "ab") as f:
+                f.truncate(keep)
+
+    def _append(self, rec: Dict[str, Any]) -> None:
+        assert self._fh is not None, "ledger not open"
+        self._fh.write(json.dumps(rec) + "\n")
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # ------------------------------------------------------------- protocol
+    def record_submitted(self, custom_ids: Sequence[str]) -> None:
+        """Write the job's request manifest (idempotent on resume: ids
+        already in the ledger are not re-recorded)."""
+        known = set(self.submitted)
+        for cid in custom_ids:
+            if cid not in known:
+                self._append({"kind": "submit", "custom_id": cid})
+                self.submitted.append(cid)
+
+    def record_output(self, custom_id: str, row: Dict[str, Any]) -> bool:
+        """Durably append one finished row BEFORE the caller treats the
+        request as done.  Returns False (and writes nothing) if the id
+        already has a committed row — exactly-once by first-wins."""
+        if custom_id in self.finished:
+            return False
+        self._append({"kind": "output", "custom_id": custom_id, "row": row})
+        self.finished[custom_id] = row
+        return True
+
+    def pending(self, custom_ids: Sequence[str]) -> List[str]:
+        return [c for c in custom_ids if c not in self.finished]
+
+
+# ---------------------------------------------------------------------------
+# resumable driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LedgerRunResult:
+    rows: List[Dict[str, Any]]      # one per request, input order
+    resumed: int                    # rows served from the ledger
+    computed: int                   # rows decoded by this run
+    report: Optional[Dict] = None   # scheduler report (None if no work)
+
+
+def run_resumable(master, requests: Sequence, ledger_path: str,
+                  max_ticks: int = 100000,
+                  on_output=None) -> LedgerRunResult:
+    """Run ``requests`` through ``master`` (a ``BatchMaster``) with
+    write-ahead progress in ``ledger_path``.  On a fresh ledger this is a
+    normal batch run that happens to journal every finish; after a crash,
+    rerunning with the same arguments skips every journaled request (zero
+    recompute of finished sequences) and decodes only the remainder.
+    Returns all rows in input order — byte-identical to an uninterrupted
+    run, because the runtime's decode is deterministic.
+
+    ``on_output(custom_id, n_finished)`` fires after each row commits —
+    chaos harnesses use it to SIGKILL the process at a deterministic
+    point in the batch."""
+    by_id: Dict[str, Any] = {}
+    for r in requests:
+        if r.custom_id in by_id:
+            raise LedgerError(
+                f"duplicate custom_id {r.custom_id!r}: the ledger keys "
+                f"progress by custom_id, so ids must be unique per job")
+        by_id[r.custom_id] = r
+    led = JobLedger(ledger_path).open()
+    try:
+        led.record_submitted([r.custom_id for r in requests])
+        todo = [by_id[cid] for cid in led.pending([r.custom_id
+                                                   for r in requests])]
+        resumed = len(requests) - len(todo)
+        rep = None
+        if todo:
+            bid = master.submit(todo)
+            for rec in master.stream(bid, max_ticks=max_ticks):
+                if isinstance(rec, SeqFinishedEvent) \
+                        and rec.custom_id is not None:
+                    row = master.result_row(bid, rec.seq_id)
+                    if row is not None and led.record_output(
+                            rec.custom_id, row) and on_output is not None:
+                        on_output(rec.custom_id, len(led.finished))
+            bo = master.retrieve(bid)
+            rep = {"status": bo.status,
+                   "scheduler_status": getattr(bo, "scheduler_status", None),
+                   "bct_s": getattr(bo, "bct_s", None)}
+        rows = [led.finished[r.custom_id] for r in requests
+                if r.custom_id in led.finished]
+        return LedgerRunResult(rows=rows, resumed=resumed,
+                               computed=len(led.finished) - resumed,
+                               report=rep)
+    finally:
+        led.close()

@@ -1,5 +1,6 @@
 """Runtime tests: batch API, checkpoint/cold-start, failure recovery,
-cluster simulation + elasticity, plan optimizer."""
+cluster simulation + elasticity, job ledger, plan optimizer."""
+import json
 import os
 
 import numpy as np
@@ -17,6 +18,7 @@ from repro.runtime.cluster import (Cluster, SimEngine, fixed_workload,
 from repro.runtime.engine import NodeEngine
 from repro.runtime.failure import HealthMonitor, Heartbeat, DeviceStatus, \
     recovery_choice
+from repro.runtime.ledger import JobLedger, LedgerError, run_resumable
 
 
 def test_batch_api_order_and_completion(rng):
@@ -77,6 +79,23 @@ def test_health_monitor_detects_failure():
     assert hm.alive() == [0, 2]
 
 
+def test_health_monitor_first_report_seeds_origin():
+    """Regression: ``last_ok`` used to default to 0.0, so the first real
+    wall-clock heartbeat (t >> 0) instantly declared every OTHER node
+    stale-dead.  The first observation must seed a common origin."""
+    hm = HealthMonitor(nodes=3, interval_s=1.0, dead_after=3)
+    failures = []
+    hm.on_failure = failures.append
+    hm.report(Heartbeat(0, 1_000_000.0, [DeviceStatus(0)]))
+    assert failures == [], "peers must not die on the first report"
+    hm.report(Heartbeat(0, 1_000_002.9, [DeviceStatus(0)]))
+    assert failures == []
+    # now nodes 1/2 really are stale relative to the common origin
+    hm.report(Heartbeat(0, 1_000_003.5, [DeviceStatus(0)]))
+    assert sorted(failures) == [1, 2]
+    assert hm.alive() == [0]
+
+
 def test_cluster_failure_recovery():
     cfg = get_config("qwen3_moe_30b")
     hw = plan_lib.Hardware()
@@ -88,8 +107,12 @@ def test_cluster_failure_recovery():
             cl.sched._node_tick(node, eng)
     r = cl.fail_node(1)
     assert r["migrated"] + r["recomputed"] > 0
+    # fail_node routes through the event-loop NODE_FAILURE handler — the
+    # single §5.6 recovery path — so the monitor and report reflect it
+    assert not cl.sched.health.failed.get(0) and cl.sched.health.failed[1]
     rep = cl.sched.run(max_ticks=50000)
     assert rep["completed"] == 64, "all sequences survive a node failure"
+    assert rep["robustness"]["failed_nodes"] == [1]
 
 
 def test_cluster_elastic_scale_up():
@@ -102,6 +125,104 @@ def test_cluster_elastic_scale_up():
     rep = cl.sched.run(max_ticks=50000)
     assert rep["completed"] == 48
     assert len(cl.sched.engines) == 3
+
+
+def test_checkpoint_restore_detects_corruption(tmp_path):
+    cfg = reduced_config("qwen2_0_5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path / "c"), params)
+    with open(str(tmp_path / "c" / "manifest.json")) as f:
+        name, info = next(iter(json.load(f)["manifest"].items()))
+    victim = str(tmp_path / "c" / info["file"])
+    with open(victim, "r+b") as f:
+        f.truncate(os.path.getsize(victim) // 2)
+    with pytest.raises(ValueError, match=name.split("/")[0]):
+        ckpt.restore(str(tmp_path / "c"))
+
+
+# ---------------------------------------------------------------------------
+# crash-resumable job ledger
+# ---------------------------------------------------------------------------
+
+
+def _ledger_master():
+    cfg = reduced_config("llama3_2_1b")
+    eng = NodeEngine(cfg, max_active=3, max_len=64, page_size=8, seed=0)
+    return BatchMaster([eng], SchedulerConfig(page_size=8))
+
+
+def _ledger_reqs(rng, n=6):
+    return [BatchRequest(custom_id=f"r{i}",
+                         prompt=list(rng.integers(2, 100, 5)),
+                         max_tokens=6) for i in range(n)]
+
+
+def test_job_ledger_exactly_once(tmp_path):
+    p = str(tmp_path / "led.jsonl")
+    led = JobLedger(p).open()
+    led.record_submitted(["a", "b"])
+    assert led.record_output("a", {"v": 1})
+    assert not led.record_output("a", {"v": 2}), "duplicate must be refused"
+    led.close()
+    led2 = JobLedger(p).open()
+    assert led2.finished == {"a": {"v": 1}}, "first write wins"
+    assert led2.pending(["a", "b"]) == ["b"]
+    led2.close()
+
+
+def test_job_ledger_truncates_torn_trailing_line(tmp_path):
+    p = str(tmp_path / "led.jsonl")
+    led = JobLedger(p).open()
+    led.record_output("a", {"v": 1})
+    led.close()
+    with open(p, "a") as f:        # SIGKILL mid-write: no trailing newline
+        f.write('{"kind": "output", "custom_id": "b", "ro')
+    led2 = JobLedger(p).open()
+    assert led2.finished == {"a": {"v": 1}} and led2.torn_records == 1
+    led2.record_output("c", {"v": 3})     # append lands on a clean line
+    led2.close()
+    led3 = JobLedger(p).open()
+    assert set(led3.finished) == {"a", "c"}
+    led3.close()
+
+
+def test_job_ledger_resume_skips_finished(tmp_path, rng):
+    """Kill-and-resume protocol, in process: a ledger holding the first 3
+    committed rows of a 6-request batch resumes to the same bytes as the
+    uninterrupted run, recomputing only the 3 unfinished requests."""
+    reqs = _ledger_reqs(rng)
+    full = run_resumable(_ledger_master(), reqs,
+                         str(tmp_path / "full.jsonl"))
+    assert full.resumed == 0 and full.computed == 6 and len(full.rows) == 6
+    # craft the post-crash ledger: manifest + first 3 output records
+    kept, dropped = 0, 0
+    with open(str(tmp_path / "full.jsonl")) as f, \
+            open(str(tmp_path / "crash.jsonl"), "w") as g:
+        for line in f:
+            if json.loads(line).get("kind") == "output":
+                if kept >= 3:
+                    dropped += 1
+                    continue
+                kept += 1
+            g.write(line)
+    assert kept == 3 and dropped == 3
+    res = run_resumable(_ledger_master(), reqs,
+                        str(tmp_path / "crash.jsonl"))
+    assert res.resumed == 3 and res.computed == 3
+    assert res.rows == full.rows, \
+        "resumed output must equal the uninterrupted run"
+    again = run_resumable(_ledger_master(), reqs,
+                          str(tmp_path / "crash.jsonl"))
+    assert again.resumed == 6 and again.computed == 0, \
+        "a completed ledger is a no-op resume (zero recompute)"
+    assert again.rows == full.rows
+
+
+def test_job_ledger_rejects_duplicate_custom_ids(tmp_path, rng):
+    reqs = _ledger_reqs(rng, 2)
+    reqs[1].custom_id = reqs[0].custom_id
+    with pytest.raises(LedgerError, match="duplicate custom_id"):
+        run_resumable(_ledger_master(), reqs, str(tmp_path / "led.jsonl"))
 
 
 def test_recovery_choice_crossover():

@@ -12,7 +12,7 @@ import time
 
 from benchmarks import (cluster_scaling, decode_throughput, expert_batching,
                         limited_memory, offline_bct, pd_disagg, primitives,
-                        slo_scaling)
+                        slo_scaling, streaming_driver)
 from benchmarks.common import ROWS, WRITTEN, rows_as_dicts, write_json
 
 TABLES = {
@@ -24,6 +24,7 @@ TABLES = {
     "t7_limited_memory": limited_memory.run,
     "f2b_expert_batching": expert_batching.run,
     "decode_throughput": decode_throughput.run,
+    "streaming_driver": streaming_driver.run,
 }
 
 

@@ -35,6 +35,10 @@ class EventKind(enum.IntEnum):          # ordering = processing priority
     LONG_TAIL = 6         # ON_LONG_TAIL -> PARTITION
     MIGRATE = 7           # opportunistic load balancing
     NODE_FAILURE = 8      # health monitor (§5.6)
+    NODE_DRAIN = 9        # elastic scale-down: graceful drain-and-handoff —
+    #                       checkpoint + MIGRATE every live sequence to a
+    #                       survivor (zero recompute), then retire the node.
+    #                       Lowest priority: a drain never outruns recovery.
 
 
 @dataclasses.dataclass(order=True)

@@ -14,7 +14,7 @@ Every phase is a handler registered on a pluggable ``SchedulerPolicy``
 table keyed by ``EventKind``; ``step()`` seeds one round of per-node work
 and then drains ``self.queue`` in EventKind priority order
 (SYNC < SYNC_DRAIN < SEQ_DONE < PAGE_BOUNDARY < MODULE_READY < REFILL <
-LONG_TAIL < MIGRATE < NODE_FAILURE).  Decode completion *enqueues* its
+LONG_TAIL < MIGRATE < NODE_FAILURE < NODE_DRAIN).  Decode completion *enqueues* its
 follow-up phases instead of inline-calling them, so custom policies can
 reorder, drop or wrap any phase, and cluster-sim / real-engine runs share
 one code path.  Per decode *page* (P tokens, §5.3) the default policy
@@ -39,6 +39,10 @@ dispatches:
   NODE_FAILURE   — §5.6 recovery: land the failed node's in-flight blobs,
                    migrate checkpointed sequences to the least-loaded
                    survivor, recompute the rest
+  NODE_DRAIN     — elastic scale-down: YIELD (fresh checkpoint) + MIGRATE
+                   every live sequence to a survivor, then retire the
+                   node — the zero-recompute handoff a graceful drain
+                   gets that a failure cannot
 
 Health-driven recovery (§5.6)
 -----------------------------
@@ -371,6 +375,49 @@ def default_node_failure(sched: "CoroutineScheduler", ev: Event) -> None:
                                       detail="failover"))
 
 
+def default_node_drain(sched: "CoroutineScheduler", ev: Event) -> None:
+    """Elastic scale-down: gracefully drain one node and hand its work
+    off.  Unlike NODE_FAILURE the node is alive, so every ACTIVE sequence
+    YIELDs first (fresh host checkpoint) and then MIGRATEs to the
+    least-loaded survivor — zero recompute by construction.  With no
+    survivor inside this scheduler the drain is refused (the node stays
+    in rotation); a replica-level drain (driver) requeues instead."""
+    eng = sched.engine(ev.node)
+    if eng is None:
+        return
+    survivors = [e for e in sched.engines if e.node_id != ev.node]
+    if not survivors:
+        sched.log.append(f"node_drain node={ev.node} refused: no survivor")
+        return
+    eng.drain_appends()     # land in-flight KV before the state moves
+
+    def load(e):
+        return sum(1 for c in sched.cos.values()
+                   if c.node == e.node_id and not c.done)
+
+    for co in [c for c in sched.cos.values()
+               if c.node == ev.node and not c.done]:
+        if co.status == Status.ACTIVE:
+            prim.yield_(co, eng)
+            sched.emit(PrimitiveEvent(co.seq_id, ev.node, primitive="yield",
+                                      detail="drain"))
+        co.partition_group = None       # the drained node's devices leave
+        dst = min(survivors, key=load)
+        try:
+            prim.migrate(co, eng, dst)
+        except TransferDeadLetter:
+            # the blob never moved; the post-dispatch dead-letter sweep
+            # escalates this node to NODE_FAILURE, whose handler replays
+            # the handoff with its migrate-vs-recompute fallback
+            sched.log.append(f"drain migrate dead-letter seq={co.seq_id}")
+            return
+        sched.emit(PrimitiveEvent(co.seq_id, dst.node_id,
+                                  primitive="migrate", detail="drain"))
+    sched.engines = survivors
+    sched.drained_nodes.append(ev.node)
+    sched.log.append(f"node_drain node={ev.node}")
+
+
 Handler = Callable[["CoroutineScheduler", Event], None]
 
 
@@ -396,6 +443,7 @@ class SchedulerPolicy:
     long_tail: Handler = default_long_tail
     migrate: Handler = default_migrate
     node_failure: Handler = default_node_failure
+    node_drain: Handler = default_node_drain
     recovery_choice: Optional[Callable] = None
 
     def table(self) -> Dict[EventKind, Handler]:
@@ -407,7 +455,8 @@ class SchedulerPolicy:
              EventKind.REFILL: self.refill,
              EventKind.LONG_TAIL: self.long_tail,
              EventKind.MIGRATE: self.migrate,
-             EventKind.NODE_FAILURE: self.node_failure}
+             EventKind.NODE_FAILURE: self.node_failure,
+             EventKind.NODE_DRAIN: self.node_drain}
         missing = set(EventKind) - set(t)
         assert not missing, f"EventKinds without a handler: {missing}"
         return t
@@ -425,6 +474,8 @@ class CoroutineScheduler:
         self.queue = EventQueue()
         self.cos: Dict[int, SequenceCoroutine] = {}
         self._next_id = 0
+        self.retired = 0            # DONE coroutines dropped via retire()
+        self.drained_nodes: List[int] = []      # NODE_DRAIN scale-downs
         self.log: List[str] = []
         self.ticks = 0
         self._t0: Optional[float] = None
@@ -493,6 +544,20 @@ class CoroutineScheduler:
         if len(vals) != n:
             raise ValueError(f"{name} list length {len(vals)} != {n}")
         return vals
+
+    def retire(self, seq_id: int) -> bool:
+        """Drop one DONE coroutine from the pool.  A streaming driver that
+        feeds a scheduler hundreds of thousands of requests over its
+        lifetime must not let ``cos`` (and every ``pending()`` scan over
+        it) grow with the whole job — a finished sequence whose result has
+        been consumed carries no further scheduling state.  Refuses (and
+        returns False) for live sequences."""
+        co = self.cos.get(seq_id)
+        if co is None or not co.done:
+            return False
+        del self.cos[seq_id]
+        self.retired += 1
+        return True
 
     def pending(self, node: int, status: Status) -> List[SequenceCoroutine]:
         return [c for c in self.cos.values()
@@ -688,14 +753,15 @@ class CoroutineScheduler:
             "dead_letter_failovers": self.dead_letter_failovers,
             "failed_nodes": sorted(n for n, f in self.health.failed.items()
                                    if f),
+            "drained_nodes": list(self.drained_nodes),
             "transfer": xfer,
         }
         return {
             "bct_s": t1 - t0,
             "ticks": self.ticks,
             "status": "completed" if self.all_done() else "exhausted",
-            "completed": sum(c.done for c in self.cos.values()),
-            "total": len(self.cos),
+            "completed": sum(c.done for c in self.cos.values()) + self.retired,
+            "total": len(self.cos) + self.retired,
             "mean_sct_s": sum(scts) / len(scts) if scts else 0.0,
             "primitives": stats,
             "robustness": robustness,

@@ -1,14 +1,24 @@
 """Data pipeline substrate: deterministic sharded synthetic LM data with
 long-tail request generators for inference workloads.
 
-Every host builds only its shard (seeded by (epoch, host_id)) — the pattern
-a 1000-node deployment needs: no global shuffle state, resumable from a
-(step, epoch) cursor stored in the train checkpoint.
+Training side: every host builds only its shard (seeded by
+(epoch, host_id)) — the pattern a 1000-node deployment needs: no global
+shuffle state, resumable from a (step, epoch) cursor stored in the train
+checkpoint.
+
+Inference side: ``LongTailRequestStream`` generates batch-API request
+dicts with lognormal prompt/output lengths (the Fig. 2c long-tail shape
+``runtime.cluster.longtail_workload`` measures against), streamed one
+request at a time so a million-line input file is written in O(1)
+memory.  Requests are fully deterministic given the seed — the
+streaming driver's byte-identical-resume tests depend on it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional
+import json
+import math
+from typing import Any, Dict, Iterator, List, Optional
 
 import numpy as np
 
@@ -55,6 +65,65 @@ class SyntheticLMStream:
         while True:
             yield self.batch_at(step)
             step += 1
+
+
+class LongTailRequestStream:
+    """Seeded stream of batch-input request dicts with long-tail lengths.
+
+    Prompt lengths are Poisson(mean_in); output budgets are lognormal
+    (mu = log(mean_out) - sigma^2/2, so the mean is ``mean_out`` and the
+    P99/P95 tail ratio lands near Fig. 2c at sigma≈1.0) — the same
+    calibration as ``longtail_workload``, but emitted as jsonl-ready
+    request dicts one at a time instead of a materialized Workload.
+
+    Each request draws from its own ``SeedSequence([seed, i])``, so
+    request *i* is a pure function of (seed, i): regeneration, resume
+    and replica reassignment all see identical requests.  Greedy by
+    default (temperature 0) — simulated greedy decode is deterministic,
+    which the driver's byte-identical merged-output contract needs.
+    """
+
+    def __init__(self, n: int, *, seed: int = 0, mean_in: int = 64,
+                 mean_out: int = 24, sigma: float = 1.0,
+                 max_in_cap: int = 4096, max_out_cap: int = 2048,
+                 vocab: int = 32000, temperature: float = 0.0):
+        self.n = int(n)
+        self.seed = int(seed)
+        self.mean_in = int(mean_in)
+        self.mean_out = int(mean_out)
+        self.sigma = float(sigma)
+        self.max_in_cap = int(max_in_cap)
+        self.max_out_cap = int(max_out_cap)
+        self.vocab = int(vocab)
+        self.temperature = float(temperature)
+
+    def request(self, i: int) -> Dict[str, Any]:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, i]))
+        n_in = int(min(max(rng.poisson(self.mean_in), 4), self.max_in_cap))
+        mu = math.log(self.mean_out) - self.sigma ** 2 / 2
+        n_out = int(min(max(int(rng.lognormal(mu, self.sigma)), 2),
+                        self.max_out_cap))
+        body: Dict[str, Any] = {
+            "prompt": [int(t) for t in rng.integers(2, self.vocab, n_in)],
+            "max_tokens": n_out,
+        }
+        if self.temperature > 0.0:
+            # explicit per-request seed: sampled decode stays a pure
+            # function of the request, never of the scheduler's seq_id
+            body["temperature"] = self.temperature
+            body["seed"] = self.seed * 1_000_003 + i
+        return {"custom_id": f"req-{i:08d}", "body": body}
+
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        for i in range(self.n):
+            yield self.request(i)
+
+    def write_jsonl(self, path: str) -> int:
+        """Stream the whole job to a jsonl input file (O(1) memory)."""
+        with open(path, "w", encoding="utf-8", newline="\n") as fh:
+            for req in self:
+                fh.write(json.dumps(req) + "\n")
+        return self.n
 
 
 def frontend_stub(cfg: ModelConfig, batch: Dict[str, np.ndarray],

@@ -38,7 +38,13 @@ class BatchRequest:
 
     @classmethod
     def from_json(cls, line: str) -> "BatchRequest":
-        d = json.loads(line)
+        return cls.from_dict(json.loads(line))
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "BatchRequest":
+        """Build from an already-parsed input line — the streaming driver
+        peeks ``custom_id`` before deciding whether to materialize the
+        request at all (resume skip / duplicate skip)."""
         body = d.get("body", d)
         sp = SamplingParams(
             temperature=float(body.get("temperature", 0.0)),
@@ -69,9 +75,34 @@ class BatchObject:
     results: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass
+class _LiveBatch:
+    """Working state of one incremental (driver-fed) batch: a long-lived
+    scheduler that requests are appended to over time and pumped round by
+    round.  Memory is bounded by the in-flight set, not the job: finished
+    sequences are retired from the scheduler the moment their row is
+    captured, and rows leave via ``pop_row`` (write-ahead consumers
+    journal them immediately)."""
+    sched: CoroutineScheduler
+    by_seq: Dict[int, BatchRequest] = dataclasses.field(default_factory=dict)
+    rows: Dict[int, Dict[str, Any]] = dataclasses.field(default_factory=dict)
+    appended: int = 0
+    finished: int = 0
+
+
 class BatchMaster:
     """Master node: accepts batches, partitions sequences across workers via
-    the coroutine scheduler, streams results as they complete."""
+    the coroutine scheduler, streams results as they complete.
+
+    Two submission surfaces:
+
+    * ``submit`` + ``run``/``stream`` — the OpenAI-style one-shot batch
+      (whole request list up front, results retained on the batch object).
+    * ``open`` + ``append``/``pump`` — the incremental surface the
+      streaming job driver feeds: requests trickle in under a bounded
+      window, each ``pump`` runs ONE scheduler round and returns its
+      records, finished rows are popped (not retained), and ``cancel``
+      hands back whatever never finished (replica drain/requeue)."""
 
     def __init__(self, engines: Sequence, sched_cfg: SchedulerConfig = None,
                  oversubscribe: float = 4.0, policy=None, fault_plan=None):
@@ -90,6 +121,7 @@ class BatchMaster:
         self._scheds: Dict[str, CoroutineScheduler] = {}
         self._ids: Dict[str, List[int]] = {}
         self._rows: Dict[str, Dict[int, Dict[str, Any]]] = {}
+        self._live: Dict[str, _LiveBatch] = {}
 
     def submit(self, requests: Sequence[BatchRequest]) -> str:
         bid = f"batch_{uuid.uuid4().hex[:12]}"
@@ -99,6 +131,123 @@ class BatchMaster:
         self.batches[bid] = bo
         self._requests[bid] = list(requests)
         return bid
+
+    # ----------------------------------------------------- incremental batch
+    def open(self) -> str:
+        """Start a long-lived incremental batch: the scheduler exists
+        immediately, requests arrive later via ``append``, and the caller
+        pumps rounds explicitly.  This is one elastic data-parallel
+        *replica* from the streaming driver's point of view."""
+        bid = f"batch_{uuid.uuid4().hex[:12]}"
+        bo = BatchObject(id=bid, status="in_progress")
+        self.batches[bid] = bo
+        self._live[bid] = _LiveBatch(
+            sched=CoroutineScheduler(self.engines, self.sched_cfg,
+                                     policy=self.policy,
+                                     fault_plan=self.fault_plan))
+        return bid
+
+    def append(self, bid: str,
+               requests: Sequence[BatchRequest]) -> List[int]:
+        """Feed more requests to a live batch; the next pumped round's
+        REFILL admits them (mid-stream COMBINE)."""
+        lb = self._live[bid]
+        reqs = list(requests)
+        ids = lb.sched.submit([r.prompt for r in reqs],
+                              [r.max_tokens for r in reqs],
+                              sampling=[r.sampling for r in reqs],
+                              logprobs=[r.logprobs for r in reqs],
+                              top_logprobs=[r.top_logprobs for r in reqs])
+        for sid, r in zip(ids, reqs):
+            lb.by_seq[sid] = r
+        lb.appended += len(reqs)
+        self.batches[bid].request_counts["total"] += len(reqs)
+        return ids
+
+    def pump(self, bid: str) -> List[RuntimeRecord]:
+        """Run ONE scheduler round of a live batch; returns its records
+        with ``custom_id`` annotated.  Each ``SeqFinishedEvent``'s result
+        row is staged for ``pop_row`` and the sequence is retired from the
+        scheduler — resident state stays proportional to the in-flight
+        window, never the job."""
+        lb = self._live[bid]
+        recs = lb.sched.step()
+        finished: List[int] = []
+        for rec in recs:
+            req = lb.by_seq.get(rec.seq_id)
+            if req is not None:
+                rec.custom_id = req.custom_id
+                if isinstance(rec, SeqFinishedEvent):
+                    lb.rows[rec.seq_id] = self._result_row(
+                        req, lb.sched.cos[rec.seq_id])
+                    finished.append(rec.seq_id)
+        for sid in finished:
+            lb.sched.retire(sid)
+            del lb.by_seq[sid]
+            lb.finished += 1
+            self.batches[bid].request_counts["completed"] += 1
+        return recs
+
+    def pop_row(self, bid: str, seq_id: int) -> Optional[Dict[str, Any]]:
+        """Take ownership of one finished row (write-ahead consumers
+        journal it, then it is gone from the master)."""
+        return self._live[bid].rows.pop(seq_id, None)
+
+    def in_flight(self, bid: str) -> int:
+        return len(self._live[bid].by_seq)
+
+    def live_engines(self, bid: str) -> List:
+        """Engines still in the live batch's scheduler rotation (shrinks
+        under NODE_FAILURE / NODE_DRAIN)."""
+        return list(self._live[bid].sched.engines)
+
+    def capacity(self, bid: str) -> int:
+        """Max requests worth dispatching to this live batch: surviving
+        slots times the oversubscription depth (§6.4)."""
+        slots = sum(e.max_active for e in self._live[bid].sched.engines)
+        return int(slots * self.oversubscribe)
+
+    def scheduler(self, bid: str) -> CoroutineScheduler:
+        return self._live[bid].sched
+
+    def cancel(self, bid: str) -> List[BatchRequest]:
+        """Tear down a live batch NOW and hand back every request that has
+        no captured row — the drain/requeue path.  (Rows still staged in
+        ``rows`` are NOT returned: their requests finished and a consumer
+        should ``pop_row`` them before cancelling.)"""
+        lb = self._live.pop(bid)
+        bo = self.batches[bid]
+        bo.status = "drained"
+        bo.completed_at = time.time()
+        rep = lb.sched.report()
+        bo.scheduler_status = rep["status"]
+        bo.bct_s = rep["bct_s"]
+        self._final_reports = getattr(self, "_final_reports", {})
+        self._final_reports[bid] = rep
+        return list(lb.by_seq.values())
+
+    def close(self, bid: str) -> BatchObject:
+        """Finalize a live batch whose work is fully consumed."""
+        lb = self._live.pop(bid)
+        bo = self.batches[bid]
+        rep = lb.sched.report()
+        bo.status = "completed"
+        bo.completed_at = time.time()
+        bo.scheduler_status = rep["status"]
+        bo.bct_s = rep["bct_s"]
+        self._final_reports = getattr(self, "_final_reports", {})
+        self._final_reports[bid] = rep
+        return bo
+
+    def report(self, bid: str) -> Dict[str, Any]:
+        """The scheduler report behind one batch — live (current state) or
+        final (snapshot taken at close/cancel).  One scheduler's view; the
+        driver-level ``StreamingJobDriver.report()`` merges these across
+        replicas."""
+        lb = self._live.get(bid)
+        if lb is not None:
+            return lb.sched.report()
+        return getattr(self, "_final_reports", {}).get(bid, {})
 
     # ------------------------------------------------------------- streaming
     def stream(self, bid: str,

@@ -354,6 +354,27 @@ def fixed_workload(n: int, in_len: int, out_len: int) -> Workload:
 
 
 # ---------------------------------------------------------------------------
+# node groups (replica building block for the streaming driver)
+# ---------------------------------------------------------------------------
+
+
+def sim_node_group(cfg: ModelConfig, hw: plan_lib.Hardware, *,
+                   nodes: int, first_node_id: int = 0,
+                   devices_per_node: int = 8, max_active: int = 64,
+                   max_len: int = 16384, page_size: int = 64,
+                   plan: Optional[plan_lib.Plan] = None) -> List[SimEngine]:
+    """A contiguous group of SimEngines sharing one static plan — the unit
+    a data-parallel replica owns.  ``first_node_id`` keeps node ids unique
+    across replicas so driver-level logs/reports never alias."""
+    plan = plan or plan_lib.search_plan(cfg, hw, ctx=max_len // 2,
+                                        new_tokens=1, max_active=max_active)
+    return [SimEngine(cfg, hw, node_id=first_node_id + i,
+                      num_devices=devices_per_node, max_active=max_active,
+                      max_len=max_len, page_size=page_size, plan=plan)
+            for i in range(nodes)]
+
+
+# ---------------------------------------------------------------------------
 # cluster with failures + elasticity
 # ---------------------------------------------------------------------------
 
@@ -425,6 +446,19 @@ class Cluster:
                          and r.primitive == "recompute"
                          and r.detail == "failover")
         return {"migrated": moved, "recomputed": recomputed}
+
+    def drain_node(self, node: int) -> Dict:
+        """Gracefully retire a node: pushes NODE_DRAIN through the
+        scheduler's handler — every live sequence is checkpointed (fresh
+        YIELD) and MIGRATEd to a survivor with zero recompute, then the
+        node leaves the rotation.  Contrast ``fail_node``: that path may
+        recompute; this one never should."""
+        self.sched.queue.push(EventKind.NODE_DRAIN, node, payload="scale_down")
+        recs = list(self.sched._drain_queue())
+        moved = sum(1 for r in recs if isinstance(r, PrimitiveEvent)
+                    and r.primitive == "migrate" and r.detail == "drain")
+        return {"migrated": moved,
+                "drained": node in self.sched.drained_nodes}
 
     # ---- elasticity -------------------------------------------------------
     def add_node(self) -> int:

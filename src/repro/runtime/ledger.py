@@ -44,17 +44,36 @@ would have produced — the combined output file is byte-for-byte the same.
 ``run_resumable`` packages the protocol: load ledger → skip finished →
 submit the remainder → append each finish as it lands → return all rows
 in input order.
+
+Chunked segment rotation (million-line jobs)
+--------------------------------------------
+``JobLedger`` holds every finished row in memory and replays the whole
+file on reopen — fine for a batch of thousands, quadratic pain for the
+streaming driver's million-line jobs.  ``SegmentedJobLedger`` keeps the
+record format but rotates the append file at ``rotate_records`` records
+or ``rotate_bytes`` bytes.  Sealing a segment appends ONE fsync'd line to
+``index.jsonl`` carrying the segment's ``[custom_id, offset, nbytes]``
+locators; a resume therefore reads the index (ids + locators only, no
+rows) plus the single live tail segment — reopen is O(segment), not
+O(job), and no row body is ever resident unless explicitly read back
+through its locator (``read_row`` / ``write_merged``).  Torn-line
+truncation applies only to the newest (tail) segment and the index —
+sealed segments were fsync'd before their seal record committed and are
+never rewritten.  First-wins dedup spans segments: the earliest committed
+locator for a ``custom_id`` is the row, across any crash/requeue race.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-from typing import Any, Dict, IO, List, Optional, Sequence
+from typing import (Any, Dict, IO, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple)
 
 from repro.core.events import SeqFinishedEvent
 
 LEDGER_VERSION = 1
+SEGMENT_VERSION = 1
 
 
 class LedgerError(RuntimeError):
@@ -155,6 +174,281 @@ class JobLedger:
 
     def pending(self, custom_ids: Sequence[str]) -> List[str]:
         return [c for c in custom_ids if c not in self.finished]
+
+
+# ---------------------------------------------------------------------------
+# chunked segment rotation
+# ---------------------------------------------------------------------------
+
+
+def _read_clean_lines(path: str) -> Tuple[List[bytes], int]:
+    """Read a ledger jsonl file tolerating a torn trailing line from a
+    mid-write SIGKILL: the torn tail is truncated away (the record never
+    committed) and the clean lines are returned.  Returns (lines,
+    torn_count)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    torn = 0
+    keep = len(data)
+    if data and not data.endswith(b"\n"):
+        keep = data.rfind(b"\n") + 1
+        torn += 1
+    if keep < len(data):
+        with open(path, "ab") as f:
+            f.truncate(keep)
+    return data[:keep].splitlines(), torn
+
+
+class SegmentedJobLedger:
+    """Write-ahead output ledger with chunked segment rotation.
+
+    Layout under ``root/``::
+
+        index.jsonl       meta + one fsync'd "seal" record per sealed
+                          segment: {"kind": "seal", "segment": k,
+                          "records": n, "loc": [[custom_id, off, len], ..]}
+        seg-00000000.jsonl  append-only output records (JobLedger format)
+        seg-00000001.jsonl  ...
+
+    ``open()`` loads the index and replays ONLY the live tail segment —
+    ``replayed_segments`` reports how many segment files were actually
+    parsed (the O(segment)-reopen acceptance bar).  Rows are not held in
+    memory; ``finished`` maps ``custom_id -> (segment, offset, nbytes)``
+    locators and ``read_row`` / ``write_merged`` fetch bodies on demand.
+
+    ``fsync_every`` batches fsyncs (group commit): a crash can lose at
+    most the last ``fsync_every`` *unsynced* rows, which simply re-run on
+    resume — "finished" means durable, so correctness is unaffected.
+    Seals and ``close()`` always fsync.
+    """
+
+    def __init__(self, root: str, *, rotate_records: int = 50_000,
+                 rotate_bytes: int = 64 << 20, fsync_every: int = 64):
+        assert rotate_records > 0 and rotate_bytes > 0
+        self.root = root
+        self.rotate_records = int(rotate_records)
+        self.rotate_bytes = int(rotate_bytes)
+        self.fsync_every = max(int(fsync_every), 1)
+        self.finished: Dict[str, Tuple[int, int, int]] = {}   # cid -> loc
+        self.meta: Dict[str, Any] = {}
+        self.torn_records = 0
+        self.replayed_segments = 0      # segment FILES parsed at open()
+        self.sealed_segments = 0
+        self.duplicates_refused = 0
+        self._live_seg = 0
+        self._seg_records = 0
+        self._seg_bytes = 0
+        self._seg_loc: List[List] = []      # [cid, off, nbytes] this segment
+        self._unsynced = 0
+        self._fh: Optional[IO[bytes]] = None
+        self._idx_fh: Optional[IO[str]] = None
+        self._readers: Dict[int, IO[bytes]] = {}
+
+    # ------------------------------------------------------------------ paths
+    def _seg_path(self, k: int) -> str:
+        return os.path.join(self.root, f"seg-{k:08d}.jsonl")
+
+    @property
+    def _index_path(self) -> str:
+        return os.path.join(self.root, "index.jsonl")
+
+    @property
+    def live_segment(self) -> int:
+        return self._live_seg
+
+    # ------------------------------------------------------------------ open
+    def open(self) -> "SegmentedJobLedger":
+        os.makedirs(self.root, exist_ok=True)
+        fresh = not os.path.exists(self._index_path)
+        if not fresh:
+            self._load_index()
+            self._replay_tail()
+        self._idx_fh = open(self._index_path, "a")
+        if fresh:
+            self._append_index({"kind": "meta", "version": SEGMENT_VERSION,
+                                "rotate_records": self.rotate_records,
+                                "rotate_bytes": self.rotate_bytes})
+        self._fh = open(self._seg_path(self._live_seg), "ab")
+        return self
+
+    def _load_index(self) -> None:
+        """Sealed-segment state comes from the index alone: ids + locators,
+        never row bodies.  A torn trailing seal (crash mid-seal) is
+        truncated; its segment is then the live tail and replays fully."""
+        lines, torn = _read_clean_lines(self._index_path)
+        self.torn_records += torn
+        for line in lines:
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                self.torn_records += 1
+                continue
+            kind = rec.get("kind")
+            if kind == "meta":
+                self.meta = rec
+                if rec.get("version", 1) > SEGMENT_VERSION:
+                    raise LedgerError(
+                        f"segmented ledger {self.root} written by a newer "
+                        f"version ({rec.get('version')} > {SEGMENT_VERSION})")
+            elif kind == "seal":
+                seg = int(rec["segment"])
+                self.sealed_segments += 1
+                self._live_seg = max(self._live_seg, seg + 1)
+                for cid, off, n in rec["loc"]:
+                    # first-wins across segments: the earliest committed
+                    # locator is THE row for this custom_id
+                    self.finished.setdefault(cid, (seg, int(off), int(n)))
+
+    def _replay_tail(self) -> None:
+        """Parse the one live (unsealed) tail segment — the only segment
+        file a resume ever reads."""
+        path = self._seg_path(self._live_seg)
+        if not os.path.exists(path):
+            return
+        self.replayed_segments = 1
+        lines, torn = _read_clean_lines(path)
+        self.torn_records += torn
+        off = 0
+        for line in lines:
+            nbytes = len(line) + 1          # + newline
+            if line.strip():
+                try:
+                    rec = json.loads(line)
+                except ValueError:
+                    self.torn_records += 1
+                    off += nbytes
+                    continue
+                if rec.get("kind") == "output":
+                    cid = rec["custom_id"]
+                    loc = (self._live_seg, off, nbytes)
+                    if cid in self.finished:
+                        self.duplicates_refused += 1
+                    else:
+                        self.finished[cid] = loc
+                        self._seg_loc.append([cid, off, nbytes])
+                self._seg_records += 1
+            off += nbytes
+        self._seg_bytes = off
+
+    # ------------------------------------------------------------------ write
+    def record_output(self, custom_id: str, row: Dict[str, Any]) -> bool:
+        """Durably append one finished row; False (nothing written) if the
+        id already committed — exactly-once by first-wins, across
+        segments and across a crashed run's requeue race."""
+        if custom_id in self.finished:
+            self.duplicates_refused += 1
+            return False
+        assert self._fh is not None, "ledger not open"
+        line = (json.dumps({"kind": "output", "custom_id": custom_id,
+                            "row": row}) + "\n").encode()
+        off = self._seg_bytes
+        self._fh.write(line)
+        self._fh.flush()
+        self._unsynced += 1
+        if self._unsynced >= self.fsync_every:
+            os.fsync(self._fh.fileno())
+            self._unsynced = 0
+        self.finished[custom_id] = (self._live_seg, off, len(line))
+        self._seg_loc.append([custom_id, off, len(line)])
+        self._seg_records += 1
+        self._seg_bytes += len(line)
+        if (self._seg_records >= self.rotate_records
+                or self._seg_bytes >= self.rotate_bytes):
+            self._rotate()
+        return True
+
+    def _rotate(self) -> None:
+        """Seal the live segment: fsync it, commit its locator line to the
+        index, then start a fresh segment.  Crash windows are all safe —
+        before the seal fsyncs, the old segment is simply the tail and
+        replays; after, the (possibly not-yet-created) next segment is."""
+        assert self._fh is not None
+        os.fsync(self._fh.fileno())
+        self._unsynced = 0
+        self._fh.close()
+        self._append_index({"kind": "seal", "segment": self._live_seg,
+                            "records": self._seg_records,
+                            "loc": self._seg_loc})
+        self.sealed_segments += 1
+        self._live_seg += 1
+        self._seg_records = 0
+        self._seg_bytes = 0
+        self._seg_loc = []
+        self._fh = open(self._seg_path(self._live_seg), "ab")
+
+    def _append_index(self, rec: Dict[str, Any]) -> None:
+        assert self._idx_fh is not None
+        self._idx_fh.write(json.dumps(rec) + "\n")
+        self._idx_fh.flush()
+        os.fsync(self._idx_fh.fileno())
+
+    def close(self) -> None:
+        for fh in self._readers.values():
+            fh.close()
+        self._readers = {}
+        if self._fh is not None:
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+            self._unsynced = 0
+            self._fh.close()
+            self._fh = None
+        if self._idx_fh is not None:
+            self._idx_fh.close()
+            self._idx_fh = None
+
+    # ------------------------------------------------------------------ read
+    def has(self, custom_id: str) -> bool:
+        return custom_id in self.finished
+
+    def __len__(self) -> int:
+        return len(self.finished)
+
+    def pending(self, custom_ids: Sequence[str]) -> List[str]:
+        return [c for c in custom_ids if c not in self.finished]
+
+    def _reader(self, seg: int) -> IO[bytes]:
+        fh = self._readers.get(seg)
+        if fh is None:
+            fh = self._readers[seg] = open(self._seg_path(seg), "rb")
+        return fh
+
+    def read_record(self, custom_id: str) -> Optional[bytes]:
+        """The raw committed ledger line for one finished id (locator
+        pread — no segment scan)."""
+        loc = self.finished.get(custom_id)
+        if loc is None:
+            return None
+        seg, off, n = loc
+        if seg == self._live_seg and self._fh is not None:
+            self._fh.flush()
+        fh = self._reader(seg)
+        fh.seek(off)
+        return fh.read(n)
+
+    def read_row(self, custom_id: str) -> Optional[Dict[str, Any]]:
+        raw = self.read_record(custom_id)
+        if raw is None:
+            return None
+        return json.loads(raw)["row"]
+
+    def write_merged(self, custom_ids: Iterable[str], out) -> int:
+        """Stream the rows for ``custom_ids`` (typically the job's input
+        order) to the text file object ``out`` as jsonl; ids without a
+        committed row are skipped.  Returns rows written.  Deterministic
+        given deterministic rows — the byte-identical-resume contract."""
+        n = 0
+        for cid in custom_ids:
+            row = self.read_row(cid)
+            if row is None:
+                continue
+            out.write(json.dumps(row) + "\n")
+            n += 1
+        return n
+
+    def iter_finished(self) -> Iterator[str]:
+        return iter(self.finished)
 
 
 # ---------------------------------------------------------------------------

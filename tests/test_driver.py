@@ -1,0 +1,195 @@
+"""Streaming job driver tests: bounded window, elastic replicas,
+auto-drain on dead-letter, kill-and-resume byte-identity, and the
+long-tail request stream that feeds it."""
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import plan as plan_lib
+from repro.core.scheduler import SchedulerConfig
+from repro.data.pipeline import LongTailRequestStream
+from repro.driver import (DriverConfig, JsonlRequestSource,
+                          StreamingJobDriver, iter_custom_ids)
+from repro.runtime.cluster import sim_node_group
+from repro.runtime.faults import Fault, FaultPlan
+
+N = 400
+WINDOW = 48
+
+
+@pytest.fixture(scope="module")
+def sim_parts():
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    plan = plan_lib.search_plan(cfg, hw, ctx=2048, new_tokens=1,
+                                max_active=16)
+    return cfg, hw, plan
+
+
+def _factory(sim_parts):
+    cfg, hw, plan = sim_parts
+
+    def factory(rid):
+        return sim_node_group(cfg, hw, nodes=2, first_node_id=rid * 100,
+                              max_active=16, max_len=4096, page_size=64,
+                              plan=plan)
+    return factory
+
+
+def _input(tmp_path, n=N, seed=11):
+    p = str(tmp_path / "in.jsonl")
+    LongTailRequestStream(n, seed=seed, mean_in=24,
+                          mean_out=10).write_jsonl(p)
+    return p
+
+
+def _driver(tmp_path, inp, sim_parts, *, name="out", window=WINDOW,
+            rotate_records=64, fault_plan_factory=None, max_rounds=10 ** 7):
+    return StreamingJobDriver(
+        inp, str(tmp_path / f"{name}.jsonl"), str(tmp_path / f"led_{name}"),
+        _factory(sim_parts),
+        cfg=DriverConfig(window=window, rotate_records=rotate_records,
+                         max_rounds=max_rounds),
+        sched_cfg=SchedulerConfig(page_size=64),
+        fault_plan_factory=fault_plan_factory)
+
+
+# ---------------------------------------------------------------------------
+# long-tail request stream (data/pipeline.py)
+# ---------------------------------------------------------------------------
+
+
+def test_longtail_stream_deterministic_and_long_tailed(tmp_path):
+    a = list(LongTailRequestStream(200, seed=3))
+    b = list(LongTailRequestStream(200, seed=3))
+    assert a == b, "same seed => identical requests"
+    s = LongTailRequestStream(200, seed=3)
+    assert s.request(17) == a[17], "request(i) is a pure function"
+    assert [r["custom_id"] for r in a] == \
+        [f"req-{i:08d}" for i in range(200)]
+    outs = sorted(r["body"]["max_tokens"] for r in a)
+    assert outs[-1] >= 4 * outs[len(outs) // 2], \
+        "lognormal budgets must have a heavy tail (max >> median)"
+    p = str(tmp_path / "in.jsonl")
+    assert LongTailRequestStream(50, seed=1).write_jsonl(p) == 50
+    assert list(iter_custom_ids(p)) == [f"req-{i:08d}" for i in range(50)]
+
+
+def test_jsonl_source_bounded_take_and_skip(tmp_path):
+    inp = _input(tmp_path, n=30)
+    seen = {f"req-{i:08d}" for i in range(0, 30, 2)}   # pretend even done
+    src = JsonlRequestSource(inp, skip=seen.__contains__).open()
+    got = src.take(5)
+    assert len(got) == 5 and not src.exhausted
+    got += src.take(100)
+    assert src.exhausted and src.skipped == 15
+    assert [r.custom_id for r in got] == \
+        sorted({f"req-{i:08d}" for i in range(1, 30, 2)})
+    src.close()
+
+
+# ---------------------------------------------------------------------------
+# driver end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_driver_elastic_end_to_end(tmp_path, sim_parts):
+    """Mid-job scale_up + requeue-drain: all requests complete exactly
+    once, merged output is in input order, and the resident window never
+    exceeds its bound."""
+    inp = _input(tmp_path)
+    drv = _driver(tmp_path, inp, sim_parts)
+    acts = {}
+
+    def hook(d, rnd):
+        if rnd == 3 and "up" not in acts:
+            acts["up"] = d.scale_up()
+        if rnd == 6 and "drain" not in acts and len(d._open_replicas()) > 1:
+            acts["drain"] = d.drain(d.replicas[0].rid, requeue=True)
+
+    res = drv.run(on_round=hook)
+    assert res.status == "completed"
+    assert res.merged_records == N, "drain must lose zero requests"
+    assert res.scale_ups == 1 and "drain" in acts
+    assert res.peak_resident <= WINDOW
+    with open(res.merged_path) as f:
+        cids = [json.loads(l)["custom_id"] for l in f]
+    assert cids == [f"req-{i:08d}" for i in range(N)], "input order"
+    rep = res.report
+    assert rep["completed"] == N
+    assert set(rep["scheduler_reports"]) == {r.rid for r in drv.replicas}
+    # merged robustness counters: sums + per-replica node lists
+    assert rep["robustness"]["transfer"]["dead_letters"] == 0
+    assert rep["ledger"]["sealed_segments"] >= 2, "rotation exercised"
+
+
+def test_driver_auto_drains_dead_lettered_replica(tmp_path, sim_parts):
+    """A replica whose scheduler dead-letters a node is drained
+    automatically; its unfinished requests requeue and the job still
+    completes exactly once (first-wins ledger absorbs any race)."""
+    inp = _input(tmp_path, n=120)
+
+    def fpf(rid):
+        if rid == 0:    # poison only the first replica
+            return FaultPlan([Fault("transfer_fail", node=0, at_tick=2,
+                                    count=99, transfer_kind="install")],
+                             seed=0)
+        return None
+
+    drv = _driver(tmp_path, inp, sim_parts, name="auto",
+                  fault_plan_factory=fpf)
+    res = drv.run()
+    assert res.status == "completed"
+    assert res.merged_records == 120
+    assert res.auto_drained >= 1, "dead-letter must trigger auto-drain"
+    assert res.report["robustness"]["dead_letter_failovers"] >= 1
+    # the poisoned replica is gone; a respawned/remaining one finished
+    assert any(r.closed for r in drv.replicas)
+
+
+def test_driver_graceful_drain_finishes_in_flight(tmp_path, sim_parts):
+    inp = _input(tmp_path, n=80)
+    drv = _driver(tmp_path, inp, sim_parts, name="grace")
+
+    def hook(d, rnd):
+        if rnd == 2 and d.scale_ups == 0:
+            d.scale_up()
+            d.drain(d.replicas[0].rid, requeue=False)
+
+    res = drv.run(on_round=hook)
+    assert res.status == "completed" and res.merged_records == 80
+    assert res.requeued == 0, "graceful drain never requeues"
+    assert drv.replicas[0].closed
+
+
+def test_driver_kill_resume_byte_identical(tmp_path, sim_parts):
+    """SIGKILL mid-job, then resume with a fresh process: merged output
+    is byte-identical to the uninterrupted run and only the ledger's
+    tail segment is replayed."""
+    inp = _input(tmp_path, n=300, seed=9)
+    clean = _driver(tmp_path, inp, sim_parts, name="clean").run()
+    assert clean.status == "completed"
+    clean_bytes = open(clean.merged_path, "rb").read()
+
+    out = str(tmp_path / "killed.jsonl")
+    led = str(tmp_path / "led_killed")
+    worker = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                          "streaming_driver.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    args = [sys.executable, worker, "--worker", inp, out, led]
+    p = subprocess.run(args + ["100"], capture_output=True, env=env)
+    assert p.returncode == -signal.SIGKILL, p.stderr.decode()[-2000:]
+    assert not os.path.exists(out), "killed run must not publish output"
+    p = subprocess.run(args + ["-1"], capture_output=True, env=env)
+    assert p.returncode == 0, p.stderr.decode()[-2000:]
+    info = json.loads(p.stdout.decode().strip().splitlines()[-1])
+    assert info["status"] == "completed" and info["merged"] == 300
+    assert info["skipped"] > 0, "resume must skip journaled rows"
+    assert info["replayed"] <= 1, "resume replays only the tail segment"
+    assert open(out, "rb").read() == clean_bytes

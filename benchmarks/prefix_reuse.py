@@ -1,0 +1,130 @@
+"""Shared-prefix KV reuse: fork fan-out FLOPs and overlap-sweep throughput.
+
+Two legs, both on the virtual-clock SimEngine cluster so the numbers come
+from the §5.4 performance model rather than CPU wall time:
+
+* **fan-out** — every prompt fanned into 16 forked siblings via
+  ``submit(n=16)``; with the prefix index on, the group prefills ONCE, so
+  prefill FLOPs (∝ prompt tokens computed) must drop ≥3x vs the identical
+  run with ``enable_prefix=False``.
+* **overlap sweep** — workloads whose prompts share a leading fraction
+  f ∈ {0, 0.25, 0.5, 0.75} of their tokens; cross-submit hits skip the
+  shared pages' prefill, and effective tokens/s (prompt+decoded tokens
+  over model makespan) must beat the baseline at every f ≥ 0.5.
+
+``--smoke`` shrinks both legs for CI; assertions are identical.
+Results land in ``BENCH_prefix_reuse.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, write_json
+from repro.configs import get_config
+from repro.core import plan as plan_lib
+from repro.runtime.cluster import Cluster, Workload
+
+CFG_NAME = "qwen3_moe_30b"
+
+
+def _cluster(enable_prefix: bool, *, max_active: int, max_len: int) -> Cluster:
+    return Cluster(get_config(CFG_NAME), plan_lib.Hardware(), nodes=2,
+                   max_active=max_active, max_len=max_len, page_size=64,
+                   enable_prefix=enable_prefix)
+
+
+def _prefill_stats(cl: Cluster):
+    comp = sum(e.prefill_tokens for e in cl.engines)
+    saved = sum(e.prefill_tokens_saved for e in cl.engines)
+    secs = sum(e.prefill_s for e in cl.engines)
+    return comp, saved, secs
+
+
+def _fanout(n_prompts: int, prompt_len: int, fan: int, out_len: int):
+    """Same workload, prefix on vs off; ratio of prompt tokens computed."""
+    wl = Workload([[11 + i] * prompt_len for i in range(n_prompts)],
+                  [out_len] * n_prompts)
+    legs = {}
+    for on in (True, False):
+        cl = _cluster(on, max_active=n_prompts * fan,
+                      max_len=prompt_len + out_len + 64)
+        rep = cl.run(wl, n=fan)
+        assert rep["status"] == "completed", rep["status"]
+        comp, saved, secs = _prefill_stats(cl)
+        legs[on] = {"prefill_tokens": comp, "prefill_tokens_saved": saved,
+                    "prefill_model_s": secs, "bct_s": rep["bct_s"],
+                    "prefix": rep["prefix"]}
+    ratio = legs[False]["prefill_tokens"] / max(legs[True]["prefill_tokens"], 1)
+    flops_ratio = legs[False]["prefill_model_s"] \
+        / max(legs[True]["prefill_model_s"], 1e-12)
+    emit(f"prefix.fanout_{fan}x", legs[True]["prefill_model_s"] * 1e6,
+         f"tokens {legs[False]['prefill_tokens']}->"
+         f"{legs[True]['prefill_tokens']} ({ratio:.1f}x) "
+         f"model_s_ratio={flops_ratio:.1f}x")
+    assert ratio >= 3.0, \
+        f"{fan}-way fan-out must cut prefill FLOPs >=3x, got {ratio:.2f}x"
+    return {"fan": fan, "n_prompts": n_prompts, "prompt_len": prompt_len,
+            "tokens_ratio": ratio, "model_s_ratio": flops_ratio,
+            "on": legs[True], "off": legs[False]}
+
+
+def _overlap_workload(n: int, prompt_len: int, frac: float,
+                      out_len: int) -> Workload:
+    shared = [7] * int(prompt_len * frac)
+    prompts = [shared + [1000 + i] * (prompt_len - len(shared))
+               for i in range(n)]
+    return Workload(prompts, [out_len] * n)
+
+
+def _overlap_sweep(n: int, prompt_len: int, out_len: int, max_active: int):
+    rows = []
+    for frac in (0.0, 0.25, 0.5, 0.75):
+        wl = _overlap_workload(n, prompt_len, frac, out_len)
+        total_tokens = sum(len(p) for p in wl.prompts) + sum(wl.max_out)
+        leg = {}
+        for on in (True, False):
+            cl = _cluster(on, max_active=max_active,
+                          max_len=prompt_len + out_len + 64)
+            rep = cl.run(wl)
+            assert rep["status"] == "completed", rep["status"]
+            comp, saved, _ = _prefill_stats(cl)
+            leg[on] = {"eff_tok_s": total_tokens / max(rep["bct_s"], 1e-12),
+                       "bct_s": rep["bct_s"], "prefill_tokens": comp,
+                       "prefill_tokens_saved": saved,
+                       "hits": rep["prefix"]["hits"]}
+        gain = leg[True]["eff_tok_s"] / max(leg[False]["eff_tok_s"], 1e-12)
+        emit(f"prefix.overlap_{int(frac * 100)}pct",
+             leg[True]["bct_s"] * 1e6,
+             f"eff_tok_s {leg[False]['eff_tok_s']:.0f}->"
+             f"{leg[True]['eff_tok_s']:.0f} ({gain:.2f}x) "
+             f"saved={leg[True]['prefill_tokens_saved']}")
+        if frac >= 0.5:
+            assert gain > 1.0, \
+                f"{frac:.0%} overlap must raise eff tokens/s, got {gain:.3f}x"
+        rows.append({"overlap_frac": frac, "gain": gain,
+                     "on": leg[True], "off": leg[False]})
+    return rows
+
+
+def run(smoke: bool = False):
+    if smoke:
+        fan = _fanout(n_prompts=4, prompt_len=512, fan=16, out_len=32)
+        sweep = _overlap_sweep(n=48, prompt_len=512, out_len=32,
+                               max_active=16)
+    else:
+        fan = _fanout(n_prompts=16, prompt_len=2048, fan=16, out_len=64)
+        sweep = _overlap_sweep(n=256, prompt_len=2048, out_len=64,
+                               max_active=64)
+    write_json("prefix_reuse", {"fanout": fan, "overlap_sweep": sweep,
+                                "mode": "smoke" if smoke else "full"})
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    run(smoke=ap.parse_args().smoke)

@@ -11,8 +11,8 @@ import sys
 import time
 
 from benchmarks import (cluster_scaling, decode_throughput, expert_batching,
-                        limited_memory, offline_bct, pd_disagg, primitives,
-                        slo_scaling, streaming_driver)
+                        limited_memory, offline_bct, pd_disagg, prefix_reuse,
+                        primitives, slo_scaling, streaming_driver)
 from benchmarks.common import ROWS, WRITTEN, rows_as_dicts, write_json
 
 TABLES = {
@@ -25,6 +25,7 @@ TABLES = {
     "f2b_expert_batching": expert_batching.run,
     "decode_throughput": decode_throughput.run,
     "streaming_driver": streaming_driver.run,
+    "prefix_reuse": prefix_reuse.run,
 }
 
 

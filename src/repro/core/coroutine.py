@@ -68,6 +68,15 @@ class SequenceCoroutine:
     slot: Optional[int] = None      # device slot when ACTIVE
     partition_group: Optional[List[int]] = None  # device ids when PARTITIONed
 
+    # shared-prefix fan-out: forks of one prompt share a fork_group (the
+    # lead sibling's seq_id); the engine prefills the group's prompt once
+    # and every sibling rides the lead's span pages copy-on-write.
+    # prefix_hit_tokens counts prompt tokens whose prefill was skipped
+    # (fork dedupe or a cross-submit PrefixIndex hit) — reset on recompute
+    # recovery, where the prompt is re-prefilled from scratch.
+    fork_group: Optional[int] = None
+    prefix_hit_tokens: int = 0
+
     # module-level execution cursor (intra-forward yield position)
     module_cursor: int = 0          # index into the coroutine execution flow
     output: Any = None              # hidden states between module calls

@@ -16,6 +16,9 @@ Semantics (paper §4.2):
             (TP for a single sequence, DP for several); requires the
             coroutine to have yielded first so its state is checkpointed.
 * migrate — move a coroutine's host-resident state to another node.
+* fork    — clone a submitted coroutine into a sibling that shares the
+            prompt (and, once prefilled, the prompt's KV span pages
+            copy-on-write); siblings diverge at their first sampled token.
 """
 from __future__ import annotations
 
@@ -29,7 +32,8 @@ from repro.core.coroutine import Phase, SequenceCoroutine, Status
 
 class PrimitiveStats:
     def __init__(self):
-        self.counts = {"yield": 0, "combine": 0, "partition": 0, "migrate": 0}
+        self.counts = {"yield": 0, "combine": 0, "partition": 0,
+                       "migrate": 0, "fork": 0}
         self.seconds = {k: 0.0 for k in self.counts}
         self.bytes_moved = {"yield": 0, "combine": 0, "migrate": 0}
 
@@ -97,6 +101,28 @@ def partition(co: SequenceCoroutine, engine, device_group: List[int]) -> None:
     engine.stats.record("partition", time.monotonic() - t0)
 
 
+def fork(co: SequenceCoroutine, seq_id: int,
+         sampling=None) -> SequenceCoroutine:
+    """Clone a not-yet-prefilled coroutine into a fan-out sibling.
+
+    The sibling shares the prompt; both carry the lead's seq_id as their
+    ``fork_group`` so the engine prefills the prompt once and binds every
+    sibling to the same span pages (COW).  Divergence comes from sampling:
+    with ``seed=None`` the PR 2 token-addressable seeding keys each stream
+    off its own seq_id, so fork(n) is bitwise-identical to n independent
+    submissions."""
+    assert co.status == Status.INIT, "fork requires a not-yet-prefilled lead"
+    sib = SequenceCoroutine(
+        seq_id=seq_id, prompt=list(co.prompt), max_out=co.max_out,
+        max_in=co.max_in, sampling=sampling if sampling is not None
+        else co.sampling, logprobs=co.logprobs,
+        top_logprobs=co.top_logprobs, node=co.node)
+    co.fork_group = co.fork_group if co.fork_group is not None else co.seq_id
+    sib.fork_group = co.fork_group
+    co.fire("on_fork", sib.seq_id)
+    return sib
+
+
 def migrate(co: SequenceCoroutine, src_engine, dst_engine) -> None:
     """Move host-resident state between nodes.  Asynchronous on a real
     deployment (overlapped with compute); here the copy is immediate and
@@ -109,12 +135,19 @@ def migrate(co: SequenceCoroutine, src_engine, dst_engine) -> None:
     src_engine.drain_appends()
     nbytes = 0
     if src_engine.host_store.has(co.seq_id):
-        st = src_engine.host_store.seqs[co.seq_id]
-        nbytes = st.nbytes()
+        src_store = src_engine.host_store
+        moved = {"n": src_store.seqs[co.seq_id].nbytes()}
 
         def _move():
-            dst_engine.host_store.seqs[co.seq_id] = st
-            src_engine.host_store.drop(co.seq_id)
+            # pop + release on the source index FIRST (while prefix_node
+            # still names the source chain), then adopt on the destination:
+            # shared span pages cross once per span — a sibling that
+            # migrated earlier makes this sequence's span free
+            st = src_store.seqs.pop(co.seq_id)
+            src_node = st.prefix_node
+            moved["n"] = dst_engine.host_store.adopt(co.seq_id, st)
+            if src_node is not None and src_store.prefix_index is not None:
+                src_store.prefix_index.release(src_node)
         # the inter-node blob move is a guarded transfer when the backend
         # provides the envelope (retry/backoff; a dead-letter propagates —
         # the scheduler's failure handlers fall back to recompute)
@@ -123,6 +156,7 @@ def migrate(co: SequenceCoroutine, src_engine, dst_engine) -> None:
             xfer("migrate", _move)
         else:
             _move()
+        nbytes = moved["n"]
     co.node = dst_engine.node_id
     co.migrations += 1
     co.fire("on_migrate", dst_engine.node_id)

@@ -89,7 +89,7 @@ from repro.core.events import (Event, EventKind, EventQueue, HealthEvent,
                                SeqFinishedEvent, TokenBlockEvent)
 from repro.runtime.failure import HealthMonitor
 from repro.runtime.faults import FaultPlan, TransferDeadLetter
-from repro.sampling.params import SamplingParams
+from repro.sampling.params import SamplingParams, derive_fork_seed
 
 logger = logging.getLogger(__name__)
 
@@ -124,9 +124,24 @@ def _refill_node(sched: "CoroutineScheduler", node: int, eng) -> None:
         free_slots = eng.max_active - len(sched.pending(node, Status.ACTIVE))
         if free_slots > 0:
             batch = inits[:free_slots]
+            # keep fork groups whole across the cut: siblings must prefill
+            # in one batch so the engine runs the group's prompt forward
+            # once and binds every sibling to the lead's span pages
+            if len(batch) < len(inits) and batch[-1].fork_group is not None:
+                g = batch[-1].fork_group
+                for co in inits[len(batch):]:
+                    if co.fork_group != g:
+                        break
+                    batch.append(co)
             eng.prefill(batch)          # leaves them INACTIVE on host
             for co in batch:            # prefill emits the first token
                 sched.emit_token_block(co, 0)
+                if co.prefix_hit_tokens:
+                    # PREFIX_HIT-aware refill: these prompt tokens were
+                    # served from the prefix index, not the model forward
+                    sched.emit(PrimitiveEvent(co.seq_id, node,
+                                              primitive="prefix_hit",
+                                              detail=co.prefix_hit_tokens))
             for co in prim.combine(batch, eng):
                 sched.emit(PrimitiveEvent(co.seq_id, node,
                                           primitive="combine",
@@ -364,6 +379,7 @@ def default_node_failure(sched: "CoroutineScheduler", ev: Event) -> None:
             co.token_logprobs.clear()
             co.top_token_logprobs.clear()
             co.length = 0
+            co.prefix_hit_tokens = 0    # the re-prefill starts from scratch
             co.slot = None
             co.last_token = 0
             co.stopped = False
@@ -504,7 +520,8 @@ class CoroutineScheduler:
                sampling: Union[None, SamplingParams,
                                Sequence[SamplingParams]] = None,
                logprobs: Union[bool, Sequence[bool]] = False,
-               top_logprobs: Union[int, Sequence[int]] = 0) -> List[int]:
+               top_logprobs: Union[int, Sequence[int]] = 0,
+               n: int = 1) -> List[int]:
         """Distribute S_global evenly over nodes (Alg. 2 line 1).
 
         ``sampling``: None (greedy), one SamplingParams broadcast to every
@@ -513,36 +530,84 @@ class CoroutineScheduler:
         ``logprobs`` / ``top_logprobs`` (scalar or per-sequence) request
         the chosen-token logprob (and the top-K alternatives) for every
         generated token — computed on device inside the fused megastep and
-        returned through the same single per-page transfer."""
-        n = len(prompts)
+        returned through the same single per-page transfer.
+
+        ``n`` > 1 fans each prompt out into n forked siblings
+        (``prim.fork``): the whole group lands on one node, the engine
+        prefills the prompt ONCE and every sibling shares the prompt's KV
+        span copy-on-write.  Per-sequence lists (``max_out``, ``sampling``,
+        ...) may be given per prompt (broadcast over the group) or per
+        sibling (length ``len(prompts) * n``).  With ``seed=None`` each
+        sibling streams off its own seq_id (PR 2 token-addressable
+        seeding), so the fan-out is bitwise-identical to n independent
+        submissions; an explicit group-level seed is split per sibling via
+        ``derive_fork_seed`` so forks actually diverge."""
+        if n < 1:
+            raise ValueError(f"n must be >= 1, got {n}")
+        n_groups = len(prompts)
+        total = n_groups * n
+        group_sampling = True       # sampling given per prompt, not sibling
         if sampling is None or isinstance(sampling, SamplingParams):
-            sps = [sampling or SamplingParams()] * n
+            sps = [sampling or SamplingParams()] * total
         else:
             sps = list(sampling)
-            if len(sps) != n:
+            if len(sps) == n_groups and n > 1:
+                sps = [sp for sp in sps for _ in range(n)]
+            else:
+                group_sampling = n == 1
+            if len(sps) != total:
                 raise ValueError(
-                    f"sampling list length {len(sps)} != {n} prompts")
-        lps = self._broadcast(logprobs, n, "logprobs")
-        tlps = self._broadcast(top_logprobs, n, "top_logprobs")
+                    f"sampling list length {len(sps)} != {total} sequences")
+        mos = list(max_out)
+        if len(mos) == n_groups and n > 1:
+            mos = [mo for mo in mos for _ in range(n)]
+        if len(mos) != total:
+            raise ValueError(
+                f"max_out list length {len(mos)} != {total} sequences")
+        lps = self._broadcast(logprobs, n_groups, n, "logprobs")
+        tlps = self._broadcast(top_logprobs, n_groups, n, "top_logprobs")
         ids = []
-        for i, (p, mo, sp) in enumerate(zip(prompts, max_out, sps)):
-            co = SequenceCoroutine(seq_id=self._next_id, prompt=list(p),
-                                   max_out=int(mo), sampling=sp,
-                                   logprobs=bool(lps[i]) or int(tlps[i]) > 0,
-                                   top_logprobs=int(tlps[i]))
-            co.node = self.engines[i % len(self.engines)].node_id
-            self.cos[co.seq_id] = co
-            ids.append(co.seq_id)
+        for g, p in enumerate(prompts):
+            base = g * n
+            lead = SequenceCoroutine(
+                seq_id=self._next_id, prompt=list(p), max_out=int(mos[base]),
+                sampling=sps[base],
+                logprobs=bool(lps[base]) or int(tlps[base]) > 0,
+                top_logprobs=int(tlps[base]))
+            lead.node = self.engines[g % len(self.engines)].node_id
+            if n > 1:
+                lead.fork_group = lead.seq_id
+            self.cos[lead.seq_id] = lead
+            ids.append(lead.seq_id)
             self._next_id += 1
+            for k in range(1, n):
+                j = base + k
+                sp = sps[j]
+                if group_sampling and sp.seed is not None:
+                    sp = dataclasses.replace(
+                        sp, seed=derive_fork_seed(sp.seed, k))
+                sib = prim.fork(lead, self._next_id, sampling=sp)
+                sib.max_out = int(mos[j])
+                sib.logprobs = bool(lps[j]) or int(tlps[j]) > 0
+                sib.top_logprobs = int(tlps[j])
+                self.cos[sib.seq_id] = sib
+                ids.append(sib.seq_id)
+                self._next_id += 1
+                self.emit(PrimitiveEvent(sib.seq_id, lead.node,
+                                         primitive="fork",
+                                         detail=lead.seq_id))
         return ids
 
     @staticmethod
-    def _broadcast(val, n: int, name: str) -> List:
+    def _broadcast(val, n_groups: int, n: int, name: str) -> List:
+        total = n_groups * n
         if isinstance(val, (bool, int)):
-            return [val] * n
+            return [val] * total
         vals = list(val)
-        if len(vals) != n:
-            raise ValueError(f"{name} list length {len(vals)} != {n}")
+        if len(vals) == n_groups and n > 1:
+            vals = [v for v in vals for _ in range(n)]
+        if len(vals) != total:
+            raise ValueError(f"{name} list length {len(vals)} != {total}")
         return vals
 
     def retire(self, seq_id: int) -> bool:
@@ -556,6 +621,13 @@ class CoroutineScheduler:
         if co is None or not co.done:
             return False
         del self.cos[seq_id]
+        # normally SEQ_DONE already dropped the host state (releasing any
+        # shared-prefix span reference); this sweep guarantees the release
+        # for teardown paths that skipped it
+        for e in self._all_engines:
+            store = getattr(e, "host_store", None)
+            if store is not None and store.has(seq_id):
+                store.drop(seq_id)
         self.retired += 1
         return True
 
@@ -748,6 +820,21 @@ class CoroutineScheduler:
         for e in self._all_engines:
             for k in xfer:
                 xfer[k] += getattr(e, "transfer_stats", {}).get(k, 0)
+        prefix = {"hits": 0, "hit_tokens": 0, "inserted_pages": 0,
+                  "evicted_pages": 0, "cow_copies": 0, "live_refs": 0,
+                  "prefill_tokens_saved": 0}
+        for e in self._all_engines:
+            store = getattr(e, "host_store", None)
+            if store is not None:
+                prefix["cow_copies"] += getattr(store, "cow_copies", 0)
+                idx = getattr(store, "prefix_index", None)
+                if idx is not None:
+                    for k in ("hits", "hit_tokens", "inserted_pages",
+                              "evicted_pages"):
+                        prefix[k] += idx.stats[k]
+                    prefix["live_refs"] += idx.live_refs()
+            prefix["prefill_tokens_saved"] += getattr(
+                e, "prefill_tokens_saved", 0)
         robustness = {
             "health_failovers": self.health_failovers,
             "dead_letter_failovers": self.dead_letter_failovers,
@@ -764,6 +851,7 @@ class CoroutineScheduler:
             "total": len(self.cos) + self.retired,
             "mean_sct_s": sum(scts) / len(scts) if scts else 0.0,
             "primitives": stats,
+            "prefix": prefix,
             "robustness": robustness,
             "log_tail": self.log[-20:],
         }

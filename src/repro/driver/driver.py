@@ -33,7 +33,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
 import collections
 
-from repro.core.events import SeqFinishedEvent
+from repro.core.events import SeqFinishedEvent, TokenBlockEvent
 from repro.driver.replica import ReplicaHandle
 from repro.driver.source import JsonlRequestSource, iter_custom_ids
 from repro.runtime.api import BatchRequest
@@ -93,6 +93,7 @@ class StreamingJobDriver:
         self._window: Deque[BatchRequest] = collections.deque()
         self._next_rid = 0
         self.completed = 0
+        self.partials_journaled = 0
         self.requeued = 0
         self.auto_drained = 0
         self.scale_ups = 0
@@ -181,7 +182,16 @@ class StreamingJobDriver:
                     self.log.append(f"drained replica={r.rid} empty")
                 continue
             for rec in r.pump():
-                if isinstance(rec, SeqFinishedEvent):
+                if isinstance(rec, TokenBlockEvent) \
+                        and rec.custom_id is not None:
+                    # flush the partial block to the journal the moment
+                    # the page lands — a tailing consumer streams tokens
+                    # while the row is in flight; a recompute's replayed
+                    # prefix is refused by offset, not double-written
+                    if self.ledger.record_partial(rec.custom_id,
+                                                  rec.offset, rec.tokens):
+                        self.partials_journaled += 1
+                elif isinstance(rec, SeqFinishedEvent):
                     row = r.pop_row(rec.seq_id)
                     if row is not None and self.ledger.record_output(
                             row["custom_id"], row):
@@ -297,7 +307,10 @@ class StreamingJobDriver:
                        "live_segment": self.ledger.live_segment,
                        "replayed_segments": self.ledger.replayed_segments,
                        "torn_records": self.ledger.torn_records,
-                       "duplicates_refused": self.ledger.duplicates_refused},
+                       "duplicates_refused": self.ledger.duplicates_refused,
+                       "partials_journaled": self.partials_journaled,
+                       "partial_duplicates_refused":
+                           self.ledger.partial_duplicates_refused},
             "scheduler_reports": per,
             "log_tail": self.log[-20:],
         }

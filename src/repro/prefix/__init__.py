@@ -1,0 +1,4 @@
+"""Shared-prefix KV reuse: trie index, refcounted spans, COW pages."""
+from repro.prefix.index import PrefixIndex, PrefixNode, block_key
+
+__all__ = ["PrefixIndex", "PrefixNode", "block_key"]

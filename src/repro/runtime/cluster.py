@@ -54,7 +54,8 @@ class SimEngine:
                  partition_efficiency: float = 0.7,
                  reconfig_s: float = 7.0,
                  faults: Optional[NodeFaults] = None,
-                 retry_policy: Optional[RetryPolicy] = None):
+                 retry_policy: Optional[RetryPolicy] = None,
+                 enable_prefix: bool = True):
         self.cfg = cfg
         self.hw = hw
         self.node_id = node_id
@@ -66,11 +67,14 @@ class SimEngine:
         self.reconfig_s = reconfig_s
         self.plan = plan or plan_lib.search_plan(
             cfg, hw, ctx=max_len // 2, new_tokens=1, max_active=max_active)
-        self.host_store = HostKVStore(page_size)
+        self.host_store = HostKVStore(page_size, enable_prefix=enable_prefix)
         self.allocator = PageAllocator(max_active * 4, page_size)
         self.stats = PrimitiveStats()
         self.vclock = 0.0
         self.busy_s = 0.0
+        self.prefill_tokens = 0         # prompt tokens actually computed
+        self.prefill_tokens_saved = 0   # served from fork dedupe / the index
+        self.prefill_s = 0.0            # §5.4-model seconds spent in prefill
         self.failed = False
         self.slot_owner: List[Optional[int]] = [None] * max_active
         # pipelined host-KV staging (same two-stage protocol as the real
@@ -290,18 +294,64 @@ class SimEngine:
             self.vclock += 0.001 if e["hidden"] else 0.005
 
     def prefill(self, cos: Sequence[SequenceCoroutine]):
+        """Shared-prefix-aware prefill: identical prompts in the batch
+        (fork groups or coincidental duplicates) run the virtual forward
+        ONCE, and a prompt whose leading full pages match the node's
+        PrefixIndex is charged only for its tail (§5.4 model) — at least
+        one position is always recomputed so the last-token forward (and
+        its logits, on the real engine) is genuine."""
         if self.faults is not None and self.faults.dead:
             return              # zombie: coroutines stay INIT for recovery
         if not cos:
             return
-        toks = sum(c.prompt_len for c in cos)
-        t = plan_lib.step_time(self.cfg, self.hw, self.plan, len(cos),
-                               max(c.prompt_len for c in cos),
-                               max(c.prompt_len for c in cos))
-        self.vclock += t
-        self.busy_s += t
+        P = self.page_size
+        idx = self.host_store.prefix_index
+        groups: Dict[tuple, List[SequenceCoroutine]] = {}
+        for c in cos:
+            # prefix reuse off => no fork dedupe either (naive baseline)
+            key = tuple(c.prompt) if idx is not None else ("seq", c.seq_id)
+            groups.setdefault(key, []).append(c)
+        charged = 0
+        max_tail = 0
+        max_ctx = 0
+        n_charged_groups = 0
+        for group in groups.values():
+            lead = group[0]
+            chain = []
+            if idx is not None and lead.prompt_len > 1:
+                chain = idx.match(lead.prompt)
+                chain = chain[: (lead.prompt_len - 1) // P]
+            m = len(chain) * P
+            tail = lead.prompt_len - m
+            charged += tail
+            n_charged_groups += 1
+            max_tail = max(max_tail, tail)
+            max_ctx = max(max_ctx, lead.prompt_len)
+            if chain:
+                st = self.host_store.attach_shared(lead.seq_id, chain)
+                st.length = lead.prompt_len
+                lead.prefix_hit_tokens = m
+            else:
+                self.host_store.checkpoint(lead.seq_id, {}, lead.prompt_len)
+            if idx is not None:
+                self.host_store.publish_prefix(lead.seq_id, lead.prompt)
+            for sib in group[1:]:
+                if idx is not None and \
+                        self.host_store.seqs[lead.seq_id].prefix_node is not None:
+                    st = self.host_store.clone_shared(lead.seq_id, sib.seq_id)
+                    st.length = sib.prompt_len
+                else:
+                    self.host_store.checkpoint(sib.seq_id, {}, sib.prompt_len)
+                sib.prefix_hit_tokens = sib.prompt_len
+        if charged > 0:
+            t = plan_lib.step_time(self.cfg, self.hw, self.plan,
+                                   n_charged_groups, max_ctx, max_tail)
+            self.vclock += t
+            self.busy_s += t
+            self.prefill_s += t
+        self.prefill_tokens += charged
+        self.prefill_tokens_saved += sum(c.prompt_len for c in cos) - charged
         for co in cos:
-            self.host_store.checkpoint(co.seq_id, {}, co.prompt_len)
             co.length = co.prompt_len
             co.last_token = self._sim_token(co, 0)
             co.generated.append(co.last_token)
@@ -385,7 +435,8 @@ class Cluster:
                  max_active: int = 64, max_len: int = 16384,
                  page_size: int = 64,
                  sched_cfg: Optional[SchedulerConfig] = None,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 enable_prefix: bool = True):
         self.cfg = cfg
         self.hw = hw
         plan = plan_lib.search_plan(cfg, hw, ctx=max_len // 2, new_tokens=1,
@@ -393,7 +444,8 @@ class Cluster:
         self.engines = [SimEngine(cfg, hw, node_id=i,
                                   num_devices=devices_per_node,
                                   max_active=max_active, max_len=max_len,
-                                  page_size=page_size, plan=plan)
+                                  page_size=page_size, plan=plan,
+                                  enable_prefix=enable_prefix)
                         for i in range(nodes)]
         self._inter_node_bw = 25e9
         # the §5.6 migrate-vs-recompute cost model rides the scheduler's
@@ -404,8 +456,11 @@ class Cluster:
             self.engines, sched_cfg or SchedulerConfig(page_size=page_size),
             policy=policy, fault_plan=fault_plan)
 
-    def run(self, wl: Workload, max_ticks: int = 200000) -> Dict:
-        self.sched.submit(wl.prompts, wl.max_out)
+    def run(self, wl: Workload, max_ticks: int = 200000, *,
+            sampling=None, n: int = 1) -> Dict:
+        """Run a workload to completion; ``n`` > 1 fans every prompt out
+        into n forked siblings (see ``CoroutineScheduler.submit``)."""
+        self.sched.submit(wl.prompts, wl.max_out, sampling=sampling, n=n)
         rep = self.sched.run(max_ticks=max_ticks)
         rep["utilization"] = float(np.mean(
             [e.utilization() for e in self.engines if not e.failed]))

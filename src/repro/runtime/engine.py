@@ -167,7 +167,8 @@ class NodeEngine:
                  fused: bool = True, overlap: bool = True,
                  ring_buffer_bytes: Optional[int] = None, seed: int = 0,
                  faults: Optional[NodeFaults] = None,
-                 retry_policy: Optional[RetryPolicy] = None):
+                 retry_policy: Optional[RetryPolicy] = None,
+                 enable_prefix: bool = True):
         assert cfg.family in ("dense", "moe") and cfg.sliding_window == 0, \
             "mini-engine supports dense/moe caches; see cluster sim for rest"
         self.cfg = cfg
@@ -181,7 +182,7 @@ class NodeEngine:
         self.overlap = overlap
 
         self.params = T.init_params(cfg, jax.random.PRNGKey(seed))
-        self.host_store = HostKVStore(page_size)
+        self.host_store = HostKVStore(page_size, enable_prefix=enable_prefix)
         total_pages = device_pages or (max_active * max_len // page_size * 2)
         self.allocator = PageAllocator(total_pages, page_size)
         self.stats = PrimitiveStats()
@@ -234,6 +235,7 @@ class NodeEngine:
         self.b_attn = b_attn or max_active
         self.decode_steps = 0
         self.prefill_tokens = 0
+        self.prefill_tokens_saved = 0   # prompt tokens served from shared KV
         self.d2h_transfers = 0      # device→host copies through _to_host
 
         # ---- pipelined host-KV staging (stage_appends / drain_appends) ----
@@ -852,53 +854,165 @@ class NodeEngine:
 
         Executables are bucketed to (pow2 batch, pow2 sequence) and held in
         a small LRU so long mixed workloads can't accumulate one jit per
-        exact (B, S)."""
+        exact (B, S).
+
+        With the prefix index enabled the batch is first deduplicated by
+        prompt: a fork fan-out (or identical duplicate submits) forwards
+        the prompt ONCE and every sibling samples its first token from the
+        lead's logits row with its own seed — bitwise-identical to
+        independent submissions because the forward and the sampler are
+        row-wise and the first-token key is fold_in(PRNGKey(seed), 0) per
+        row.  A lead whose leading full pages already sit in the index
+        (cross-submit hit) skips their forward entirely: the span's host
+        pages are grafted into a dense cache and only the prompt tail is
+        teacher-forced through the decode step, which reproduces the full
+        prefill's last-position logits and cache bitwise (decode and
+        prefill share one attention implementation)."""
         if self.faults is not None and self.faults.dead:
             return          # zombie: coroutines stay INIT for recovery
         if not cos:
             return
-        maxlen = max(c.prompt_len for c in cos)
-        S = max(_pow2(maxlen), 8)           # pow2 sequence bucket
-        B = max(_pow2(len(cos)), 1)         # pow2 batch bucket (padded rows)
-        toks = np.zeros((B, S), np.int32)   # left-align, pad after
-        last_idx = np.zeros((B,), np.int32)
-        for i, c in enumerate(cos):
-            toks[i, : c.prompt_len] = c.prompt[:]
-            last_idx[i] = c.prompt_len - 1
-        def make():
-            def _prefill_impl(params, tokens, last):
-                h, _, caches = T._backbone(self.cfg, self.axes, params,
-                                           {"tokens": tokens}, None, True,
-                                           False)   # h is final-normed
-                hl = jnp.take_along_axis(h, last[:, None, None].astype(
-                    jnp.int32).repeat(h.shape[-1], -1), axis=1)
-                logits = T.logits_fn(self.cfg, params, hl)
-                return logits, caches
-            return jax.jit(_prefill_impl)
-        fn = _lru_get(self._prefill_cache, (B, S), _PREFILL_JIT_CAP, make)
-        logits, cache = fn(self.params, jnp.asarray(toks),
-                           jnp.asarray(last_idx))
+        idx = self.host_store.prefix_index
+        # prompt-identical groups (a fork fan-out arrives as one group); a
+        # disabled index degrades to singleton groups == the PR 1-7 path
+        groups: "OrderedDict[tuple, List[SequenceCoroutine]]" = OrderedDict()
+        lead_of: Dict[int, int] = {}
+        for c in cos:
+            key = tuple(c.prompt) if idx is not None else ("seq", c.seq_id)
+            groups.setdefault(key, []).append(c)
+        for group in groups.values():
+            for c in group:
+                lead_of[c.seq_id] = group[0].seq_id
+        leads = [g[0] for g in groups.values()]
+        names = list(self.cache.keys())
+        P = self.host_store.page_size
+        # cross-submit hits: cap the reuse at the last full page BEFORE the
+        # final prompt position — the last position must be recomputed to
+        # produce the first-token logits
+        hits: Dict[int, list] = {}
+        fresh: List[SequenceCoroutine] = []
+        for lead in leads:
+            chain = []
+            if idx is not None:
+                chain = idx.match(lead.prompt)[: (lead.prompt_len - 1) // P]
+                if chain and not all(all(nm in nd.pages for nm in names)
+                                     for nd in chain):
+                    chain = []      # span missing a cache leaf: recompute
+            if chain:
+                hits[lead.seq_id] = chain
+            else:
+                fresh.append(lead)
+
+        lead_rows: Dict[int, object] = {}   # lead seq_id -> (V,) logits row
+        fresh_logits = None
+        if fresh:
+            maxlen = max(c.prompt_len for c in fresh)
+            S = max(_pow2(maxlen), 8)         # pow2 sequence bucket
+            B = max(_pow2(len(fresh)), 1)     # pow2 batch bucket (padded)
+            toks = np.zeros((B, S), np.int32)  # left-align, pad after
+            last_idx = np.zeros((B,), np.int32)
+            for i, c in enumerate(fresh):
+                toks[i, : c.prompt_len] = c.prompt[:]
+                last_idx[i] = c.prompt_len - 1
+            def make():
+                def _prefill_impl(params, tokens, last):
+                    h, _, caches = T._backbone(self.cfg, self.axes, params,
+                                               {"tokens": tokens}, None,
+                                               True, False)  # h final-normed
+                    hl = jnp.take_along_axis(h, last[:, None, None].astype(
+                        jnp.int32).repeat(h.shape[-1], -1), axis=1)
+                    logits = T.logits_fn(self.cfg, params, hl)
+                    return logits, caches
+                return jax.jit(_prefill_impl)
+            fn = _lru_get(self._prefill_cache, (B, S), _PREFILL_JIT_CAP, make)
+            fresh_logits, cache = fn(self.params, jnp.asarray(toks),
+                                     jnp.asarray(last_idx))
+            nf = len(fresh)
+            # batched host-checkpoint gather: flatten every leaf's first-nf
+            # rows into ONE (L, nf, W, F_total) blob and move it with a
+            # single host transfer (the per-sequence/per-leaf slicing this
+            # replaces paid n_seqs * n_leaves small copies per batch)
+            W = maxlen
+            assert len({leaf.dtype for leaf in cache.values()}) == 1, \
+                "batched gather concatenates leaves: mixed dtypes would " \
+                "be silently promoted — add a per-dtype blob before " \
+                "relaxing this"
+            metas, parts = [], []
+            for name, leaf in cache.items():
+                seg = leaf[:, :nf, :W]              # (L, nf, W, *trail)
+                trail = seg.shape[3:]
+                metas.append((name, trail,
+                              int(np.prod(trail)) if trail else 1))
+                parts.append(seg.reshape(seg.shape[0], nf, W, -1))
+            blob = self._to_host(jnp.concatenate(parts, axis=-1))
+            offs, off = {}, 0
+            for name, trail, f in metas:
+                offs[name] = (off, off + f)
+                off += f
+            L = blob.shape[0]
+            for i, lead in enumerate(fresh):
+                pl = lead.prompt_len
+                slices = {}
+                for name, trail, _ in metas:
+                    lo, hi = offs[name]
+                    slices[name] = blob[:, i, :pl, lo:hi].reshape(
+                        (L, pl) + trail)
+                self.host_store.checkpoint(lead.seq_id, slices, pl)
+                lead_rows[lead.seq_id] = fresh_logits[i, 0, :]
+                self.prefill_tokens += pl
+
+        # prefix-hit leads: graft the span's host pages into a dense cache
+        # and teacher-force only the tail (at most one page + the partial
+        # block) through the decode step
+        for lead in leads:
+            chain = hits.get(lead.seq_id)
+            if chain is None:
+                continue
+            m = len(chain) * P
+            pl = lead.prompt_len
+            self.host_store.attach_shared(lead.seq_id, chain)
+            S = max(_pow2(pl), 8)
+            dense = T.init_cache(self.cfg, 1, S)
+            for name in names:
+                seg = np.concatenate([nd.pages[name] for nd in chain],
+                                     axis=1)        # (L, m, *trail)
+                dense[name] = dense[name].at[:, :, :m].set(
+                    jnp.asarray(seg)[:, None])
+            if self._decode_logits is None:
+                self._decode_logits = jax.jit(
+                    lambda p, c, t, l: T.decode_step_logits(
+                        self.cfg, self.axes, p, c, t, l),
+                    donate_argnums=(1,))
+            row = None
+            for t in range(m, pl):
+                row, dense = self._decode_logits(
+                    self.params, dense,
+                    jnp.asarray([lead.prompt[t]], jnp.int32),
+                    jnp.asarray([t], jnp.int32))
+            slices = {name: self._to_host(dense[name][:, 0, m:pl])
+                      for name in names}
+            self.host_store.append_tokens(lead.seq_id, slices, m)
+            lead_rows[lead.seq_id] = row[0]
+            lead.prefix_hit_tokens = m
+            self.prefill_tokens += pl - m
+            self.prefill_tokens_saved += m
+
+        # publish every lead's prompt pages (dedupes to canonical frozen
+        # spans), then bind fork siblings to the lead's span COW
+        if idx is not None:
+            for group in groups.values():
+                lead = group[0]
+                self.host_store.publish_prefix(lead.seq_id, lead.prompt)
+                for sib in group[1:]:
+                    self.host_store.clone_shared(lead.seq_id, sib.seq_id)
+                    sib.prefix_hit_tokens = sib.prompt_len
+                    self.prefill_tokens_saved += sib.prompt_len
+
         n = len(cos)
-        # batched host-checkpoint gather: flatten every leaf's first-n rows
-        # into ONE (L, n, W, F_total) blob and move it with a single host
-        # transfer (the per-sequence/per-leaf slicing this replaces paid
-        # n_seqs * n_leaves small copies per prefill batch)
-        W = maxlen
-        assert len({leaf.dtype for leaf in cache.values()}) == 1, \
-            "batched gather concatenates leaves: mixed dtypes would be " \
-            "silently promoted — add a per-dtype blob before relaxing this"
-        metas, parts = [], []
-        for name, leaf in cache.items():
-            seg = leaf[:, :n, :W]                   # (L, n, W, *trail)
-            trail = seg.shape[3:]
-            metas.append((name, trail, int(np.prod(trail)) if trail else 1))
-            parts.append(seg.reshape(seg.shape[0], n, W, -1))
-        blob = self._to_host(jnp.concatenate(parts, axis=-1))
-        offs, off = {}, 0
-        for name, trail, f in metas:
-            offs[name] = (off, off + f)
-            off += f
-        L = blob.shape[0]
+        if fresh_logits is not None and len(fresh) == n:
+            logits2d = fresh_logits[:n, 0, :]   # no dedupe/hit: batch rows
+        else:
+            logits2d = jnp.stack([lead_rows[lead_of[c.seq_id]] for c in cos])
         # first generated token: device-sampled when any sequence asks for
         # it (key = fold_in(PRNGKey(seed), 0), counts over the prompt);
         # all-greedy batches keep the host argmax
@@ -913,25 +1027,20 @@ class NodeEngine:
                                   T.padded_vocab(self.cfg))
             draw = self._get_prefill_sampler(n, flags)
             first = self._to_host(draw(
-                logits[:n, 0, :], jnp.asarray(st["prompt_counts"]),
+                logits2d, jnp.asarray(st["prompt_counts"]),
                 jnp.asarray(st["counts"]),
                 {k: jnp.asarray(sp[k]) for k in _SAMPLE_ROW_KEYS},
                 jnp.asarray(smp.base_keys_host(st["seed"]))))
         else:
-            logits_np = self._to_host(logits)
-            first = np.argmax(logits_np[:n, 0], axis=-1)
+            logits_np = self._to_host(logits2d)
+            first = np.argmax(logits_np, axis=-1)
         lp_np = None
         if any(c.logprobs for c in cos):
             if logits_np is None:       # sampled batch: logits still on dev
-                logits_np = self._to_host(logits)
-            lp_np = _np_log_softmax(logits_np[:n, 0])
+                logits_np = self._to_host(logits2d)
+            lp_np = _np_log_softmax(logits_np)
         for i, co in enumerate(cos):
             pl = co.prompt_len
-            slices = {}
-            for name, trail, _ in metas:
-                lo, hi = offs[name]
-                slices[name] = blob[:, i, :pl, lo:hi].reshape((L, pl) + trail)
-            self.host_store.checkpoint(co.seq_id, slices, pl)
             co.last_token = int(first[i])
             co.generated.append(co.last_token)
             if co.logprobs and lp_np is not None:
@@ -947,7 +1056,6 @@ class NodeEngine:
             co.phase = Phase.DECODING
             co.status = Status.INACTIVE
             self.synced_len[co.seq_id] = pl
-            self.prefill_tokens += pl
 
 
 # NodeEngine declares conformance to the formal backend contract; the

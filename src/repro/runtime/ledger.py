@@ -230,11 +230,16 @@ class SegmentedJobLedger:
         self.rotate_bytes = int(rotate_bytes)
         self.fsync_every = max(int(fsync_every), 1)
         self.finished: Dict[str, Tuple[int, int, int]] = {}   # cid -> loc
+        # streaming partial progress: cid -> next expected token offset.
+        # Advanced by ``record_partial``; carried through seals and tail
+        # replay so a resumed run refuses re-emitted partial rows.
+        self.partial_off: Dict[str, int] = {}
         self.meta: Dict[str, Any] = {}
         self.torn_records = 0
         self.replayed_segments = 0      # segment FILES parsed at open()
         self.sealed_segments = 0
         self.duplicates_refused = 0
+        self.partial_duplicates_refused = 0
         self._live_seg = 0
         self._seg_records = 0
         self._seg_bytes = 0
@@ -300,6 +305,11 @@ class SegmentedJobLedger:
                     # first-wins across segments: the earliest committed
                     # locator is THE row for this custom_id
                     self.finished.setdefault(cid, (seg, int(off), int(n)))
+                # seals snapshot the live partial-progress map so a resume
+                # never re-reads sealed segment bodies to rebuild it;
+                # later seals carry later snapshots and override
+                for cid, off in rec.get("partial_off", {}).items():
+                    self.partial_off[cid] = int(off)
 
     def _replay_tail(self) -> None:
         """Parse the one live (unsealed) tail segment — the only segment
@@ -328,6 +338,13 @@ class SegmentedJobLedger:
                     else:
                         self.finished[cid] = loc
                         self._seg_loc.append([cid, off, nbytes])
+                    self.partial_off.pop(cid, None)
+                elif rec.get("kind") == "partial":
+                    cid = rec["custom_id"]
+                    if cid not in self.finished:
+                        self.partial_off[cid] = max(
+                            self.partial_off.get(cid, 0),
+                            int(rec["off"]) + len(rec["tokens"]))
                 self._seg_records += 1
             off += nbytes
         self._seg_bytes = off
@@ -352,6 +369,45 @@ class SegmentedJobLedger:
             self._unsynced = 0
         self.finished[custom_id] = (self._live_seg, off, len(line))
         self._seg_loc.append([custom_id, off, len(line)])
+        self.partial_off.pop(custom_id, None)   # full row supersedes
+        self._seg_records += 1
+        self._seg_bytes += len(line)
+        if (self._seg_records >= self.rotate_records
+                or self._seg_bytes >= self.rotate_bytes):
+            self._rotate()
+        return True
+
+    def record_partial(self, custom_id: str, offset: int,
+                       tokens: Sequence[int]) -> bool:
+        """Journal a partial token block for a still-running request (the
+        streaming driver flushes every ``TokenBlockEvent`` here, so a
+        consumer tailing the segments sees tokens while the row is in
+        flight).  Exactly-once per token offset: a block at an offset the
+        ledger has already committed — a finished row, or a requeued
+        recompute re-emitting its (bitwise-identical) prefix — is refused
+        without writing.  Returns True iff the block was journaled."""
+        if custom_id in self.finished:
+            self.partial_duplicates_refused += 1
+            return False
+        expected = self.partial_off.get(custom_id, 0)
+        if offset < expected:
+            # a recompute (replica drain / crash resume) replays from
+            # offset 0; determinism makes the refused prefix identical to
+            # what is already durable, so dropping it loses nothing
+            self.partial_duplicates_refused += 1
+            return False
+        assert self._fh is not None, "ledger not open"
+        line = (json.dumps({"kind": "partial", "custom_id": custom_id,
+                            "off": int(offset),
+                            "tokens": [int(t) for t in tokens]})
+                + "\n").encode()
+        self._fh.write(line)
+        self._fh.flush()
+        self._unsynced += 1
+        if self._unsynced >= self.fsync_every:
+            os.fsync(self._fh.fileno())
+            self._unsynced = 0
+        self.partial_off[custom_id] = int(offset) + len(tokens)
         self._seg_records += 1
         self._seg_bytes += len(line)
         if (self._seg_records >= self.rotate_records
@@ -370,7 +426,8 @@ class SegmentedJobLedger:
         self._fh.close()
         self._append_index({"kind": "seal", "segment": self._live_seg,
                             "records": self._seg_records,
-                            "loc": self._seg_loc})
+                            "loc": self._seg_loc,
+                            "partial_off": dict(self.partial_off)})
         self.sealed_segments += 1
         self._live_seg += 1
         self._seg_records = 0

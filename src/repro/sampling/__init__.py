@@ -28,7 +28,7 @@ token index) is re-derivable from the coroutine's token list, so
 YIELD/COMBINE/MIGRATE/PARTITION preserve the sampled stream exactly.
 """
 from repro.sampling.params import (MAX_STOP_TOKENS, SamplingParams,
-                                   pack_params)
+                                   derive_fork_seed, pack_params)
 from repro.sampling.processors import (apply_min_p, apply_penalties,
                                        apply_temperature, apply_top_k,
                                        apply_top_p, joint_filter,
@@ -40,7 +40,7 @@ from repro.sampling.sample import (DEFAULT_FLAGS, SampleFlags, base_keys,
                                    stop_hit, token_gumbel)
 
 __all__ = [
-    "MAX_STOP_TOKENS", "SamplingParams", "pack_params",
+    "MAX_STOP_TOKENS", "SamplingParams", "derive_fork_seed", "pack_params",
     "apply_penalties", "apply_temperature", "apply_top_k", "apply_top_p",
     "apply_min_p", "joint_threshold", "joint_filter", "process_logits",
     "DEFAULT_FLAGS", "SampleFlags", "base_keys", "base_keys_host",

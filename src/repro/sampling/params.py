@@ -70,6 +70,22 @@ class SamplingParams:
         return toks, False
 
 
+def derive_fork_seed(base_seed: int, fork_index: int) -> int:
+    """Per-fork seed derivation for ``submit(n=...)`` fan-out.
+
+    An explicit seed shared by a whole fork group would make every sibling
+    decode the same stream; splitmix-style mixing gives each fork a stable,
+    well-separated seed so fork k of seed s is reproducible on its own
+    (submit a single sequence with ``derive_fork_seed(s, k)`` and you get
+    the identical stream).  Fork 0 (the lead) keeps the base seed."""
+    if fork_index == 0:
+        return base_seed
+    z = (base_seed + fork_index * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return (z ^ (z >> 31)) & 0xFFFFFFFF
+
+
 def pack_params(sps: Sequence[SamplingParams],
                 seq_ids: Sequence[int]) -> Dict[str, np.ndarray]:
     """Batch per-sequence params into row-aligned numpy arrays.

@@ -166,7 +166,10 @@ def test_prefill_jit_cache_bucketed_and_bounded(rng):
     """Prefill compilations bucket (B, S) to pow2 and evict beyond the
     LRU cap on long mixed workloads."""
     cfg = reduced_config("llama3_2_1b")
-    eng = NodeEngine(cfg, max_active=8, max_len=512, page_size=8)
+    # prefix reuse off: identical prompts would otherwise dedupe to one
+    # fresh lead and this test is about the (B, S) bucketing of fresh work
+    eng = NodeEngine(cfg, max_active=8, max_len=512, page_size=8,
+                     enable_prefix=False)
     sched = CoroutineScheduler([eng], SchedulerConfig(page_size=8))
 
     def prefill_batch(n_cos, plen):

@@ -17,6 +17,7 @@ from repro.driver import (DriverConfig, JsonlRequestSource,
                           StreamingJobDriver, iter_custom_ids)
 from repro.runtime.cluster import sim_node_group
 from repro.runtime.faults import Fault, FaultPlan
+from repro.runtime.ledger import SegmentedJobLedger
 
 N = 400
 WINDOW = 48
@@ -165,6 +166,88 @@ def test_driver_graceful_drain_finishes_in_flight(tmp_path, sim_parts):
     assert res.status == "completed" and res.merged_records == 80
     assert res.requeued == 0, "graceful drain never requeues"
     assert drv.replicas[0].closed
+
+
+def _scan_partials(ledger_root):
+    """All committed partial records across every segment, per custom_id."""
+    per = {}
+    for f in sorted(os.listdir(ledger_root)):
+        if not f.startswith("seg-"):
+            continue
+        for line in open(os.path.join(ledger_root, f), "rb").read() \
+                .splitlines():
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                continue            # torn tail line
+            if rec.get("kind") == "partial":
+                per.setdefault(rec["custom_id"], []).append(
+                    (rec["off"], len(rec["tokens"])))
+    return per
+
+
+def _assert_no_overlap(per):
+    for cid, blocks in per.items():
+        covered = set()
+        for off, n in blocks:
+            span = set(range(off, off + n))
+            assert not (covered & span), \
+                f"duplicate partial coverage for {cid} at offset {off}"
+            covered |= span
+
+
+def test_segmented_ledger_partial_journal_exactly_once(tmp_path):
+    """record_partial is exactly-once per token offset, survives rotation
+    (seal snapshots) and reopen (tail replay), and a finished row
+    supersedes the partial stream."""
+    root = str(tmp_path / "led")
+    led = SegmentedJobLedger(root, rotate_records=4).open()
+    assert led.record_partial("a", 0, [1, 2, 3])
+    assert not led.record_partial("a", 0, [1, 2, 3]), "replayed prefix"
+    assert not led.record_partial("a", 2, [9]), "offset inside committed"
+    assert led.partial_duplicates_refused == 2
+    assert led.record_partial("a", 3, [4, 5])
+    assert led.record_output("a", {"custom_id": "a", "ok": True})
+    assert not led.record_partial("a", 5, [6]), "finished row supersedes"
+    # rotation carries partial progress through the seal snapshot
+    assert led.record_partial("b", 0, [7] * 3)
+    for i in range(4):
+        led.record_output(f"fill-{i}", {"custom_id": f"fill-{i}"})
+    assert led.sealed_segments >= 1
+    led.close()
+    led2 = SegmentedJobLedger(root, rotate_records=4).open()
+    assert led2.replayed_segments <= 1, "reopen parses only the tail"
+    assert not led2.record_partial("a", 0, [1]), "finished survives reopen"
+    assert not led2.record_partial("b", 0, [7] * 3), \
+        "a resumed recompute's replayed prefix must be refused"
+    assert led2.record_partial("b", 3, [8])
+    led2.close()
+    _assert_no_overlap(_scan_partials(root))
+
+
+def test_driver_kill_resume_no_duplicate_partials(tmp_path, sim_parts):
+    """SIGKILL mid-job, resume in a fresh process: requeued recomputes
+    replay their token streams from offset 0, but the durable journal
+    must contain every token's partial record at most once."""
+    inp = str(tmp_path / "in.jsonl")
+    LongTailRequestStream(150, seed=3, mean_in=24,
+                          mean_out=120).write_jsonl(inp)
+    out = str(tmp_path / "killed.jsonl")
+    led = str(tmp_path / "led_killed")
+    worker = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                          "streaming_driver.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    args = [sys.executable, worker, "--worker", inp, out, led]
+    p = subprocess.run(args + ["40"], capture_output=True, env=env)
+    assert p.returncode == -signal.SIGKILL, p.stderr.decode()[-2000:]
+    assert _scan_partials(led), "killed run must have journaled partials"
+    p = subprocess.run(args + ["-1"], capture_output=True, env=env)
+    assert p.returncode == 0, p.stderr.decode()[-2000:]
+    info = json.loads(p.stdout.decode().strip().splitlines()[-1])
+    assert info["status"] == "completed" and info["merged"] == 150
+    per = _scan_partials(led)
+    _assert_no_overlap(per)
 
 
 def test_driver_kill_resume_byte_identical(tmp_path, sim_parts):

@@ -12,7 +12,8 @@ import time
 
 from benchmarks import (cluster_scaling, decode_throughput, expert_batching,
                         limited_memory, offline_bct, pd_disagg, prefix_reuse,
-                        primitives, slo_scaling, streaming_driver)
+                        primitives, slo_scaling, straggler_tail,
+                        streaming_driver)
 from benchmarks.common import ROWS, WRITTEN, rows_as_dicts, write_json
 
 TABLES = {
@@ -26,6 +27,7 @@ TABLES = {
     "decode_throughput": decode_throughput.run,
     "streaming_driver": streaming_driver.run,
     "prefix_reuse": prefix_reuse.run,
+    "straggler": straggler_tail.run,
 }
 
 

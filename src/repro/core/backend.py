@@ -48,7 +48,9 @@ member                    role
 ``heartbeat()``           emit this round's ``Heartbeat`` (or None when the
                           node is dead / its beat is suppressed) — the
                           scheduler feeds it to the ``HealthMonitor`` every
-                          round (§5.6)
+                          round (§5.6); the beat carries the cumulative
+                          progress counters below for the
+                          ``ProgressTracker``'s straggler detection
 ``transfer(kind, fn)``    run one risky host transfer (stage/drain/install/
                           migrate) through the fault injector + bounded
                           exponential-backoff retry envelope; raises
@@ -58,6 +60,9 @@ member                    role
 ``transfer_stats``        dict: retries / timeouts / dead_letters counters
 ``dead_lettered``         flag the scheduler polls after every dispatch to
                           escalate a dead-lettered node to NODE_FAILURE
+``decode_steps``          cumulative decode steps run (heartbeat progress)
+``tokens_out``            cumulative effective tokens emitted — per-node
+                          EWMA throughput = Δtokens_out / Δclock()
 ========================  ==================================================
 """
 from __future__ import annotations
@@ -73,6 +78,7 @@ PROTOCOL_METHODS = (
 PROTOCOL_ATTRS = (
     "node_id", "max_active", "num_devices", "host_store", "allocator",
     "stats", "faults", "retry_policy", "transfer_stats", "dead_lettered",
+    "decode_steps", "tokens_out",
 )
 
 
@@ -90,6 +96,8 @@ class ExecutionBackend(Protocol):
     retry_policy: Any
     transfer_stats: Dict[str, int]
     dead_lettered: bool
+    decode_steps: int
+    tokens_out: float
 
     def clock(self) -> float: ...
 

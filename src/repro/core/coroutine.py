@@ -51,6 +51,10 @@ class SequenceCoroutine:
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)
     stopped: bool = False
+    # deadline degradation: the scheduler's SEQ_DONE sweep sets this when
+    # wall time since submit exceeds sampling.deadline_s — the sequence
+    # finishes gracefully with whatever it has (finish_reason="deadline")
+    deadlined: bool = False
 
     # logprobs: when requested, the fused megastep returns a second (P, B)
     # f32 chosen-token logprob plane (and optional top-K alternatives)
@@ -102,13 +106,19 @@ class SequenceCoroutine:
 
     @property
     def remaining(self) -> int:
-        if self.stopped:
+        if self.stopped or self.deadlined:
             return 0
         return max(self.max_out - len(self.generated), 0)
 
     @property
     def finish_reason(self) -> str:
-        return "stop" if self.stopped else "length"
+        # a stop-token hit outranks the deadline: the output is already
+        # complete, the deadline merely arrived in the same round
+        if self.stopped:
+            return "stop"
+        if self.deadlined:
+            return "deadline"
+        return "length"
 
     def tokens(self) -> List[int]:
         return self.prompt + self.generated

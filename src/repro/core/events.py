@@ -33,9 +33,17 @@ class EventKind(enum.IntEnum):          # ordering = processing priority
     MODULE_READY = 4      # intra-forward successor enqueued by YIELD
     REFILL = 5            # ON_REFILL_NODE (§5.1 Alg. 2)
     LONG_TAIL = 6         # ON_LONG_TAIL -> PARTITION
-    MIGRATE = 7           # opportunistic load balancing
-    NODE_FAILURE = 8      # health monitor (§5.6)
-    NODE_DRAIN = 9        # elastic scale-down: graceful drain-and-handoff —
+    NODE_SLOW = 7         # straggler mitigation: a live node's EWMA
+    #                       throughput fell below the fleet median for K
+    #                       consecutive rounds (ProgressTracker) — shed a
+    #                       fraction of its work to fast survivors.  The
+    #                       node is alive (its heartbeats still arrive),
+    #                       so this is distinct from NODE_FAILURE and
+    #                       ranks just above MIGRATE: shedding is load
+    #                       balancing with evidence, not recovery
+    MIGRATE = 8           # opportunistic load balancing
+    NODE_FAILURE = 9      # health monitor (§5.6)
+    NODE_DRAIN = 10       # elastic scale-down: graceful drain-and-handoff —
     #                       checkpoint + MIGRATE every live sequence to a
     #                       survivor (zero recompute), then retire the node.
     #                       Lowest priority: a drain never outruns recovery.
@@ -109,7 +117,7 @@ class TokenBlockEvent(RuntimeRecord):
 @dataclasses.dataclass
 class SeqFinishedEvent(RuntimeRecord):
     """A sequence completed and released its device + host pages."""
-    finish_reason: str = "length"       # "stop" | "length"
+    finish_reason: str = "length"       # "stop" | "length" | "deadline"
     n_generated: int = 0
     sct_s: Optional[float] = None       # sequence completion time (§2.1)
     custom_id: Optional[str] = None
@@ -129,9 +137,10 @@ class PrimitiveEvent(RuntimeRecord):
 class HealthEvent(RuntimeRecord):
     """The health subsystem acted on a node: the monitor declared it dead
     (``reason='heartbeat'``), a transfer dead-lettered out of its retry
-    budget (``reason='dead_letter'``), or an external caller demanded a
-    failover (``reason='external'``).  ``seq_id`` is -1 — this record is
-    about a node, not a sequence."""
+    budget (``reason='dead_letter'``), an external caller demanded a
+    failover (``reason='external'``), or the progress tracker flagged a
+    live straggler (``reason='slow'`` — NODE_SLOW, not NODE_FAILURE).
+    ``seq_id`` is -1 — this record is about a node, not a sequence."""
     reason: str = "heartbeat"
     detail: Any = None
     custom_id: Optional[str] = None

@@ -14,7 +14,8 @@ Every phase is a handler registered on a pluggable ``SchedulerPolicy``
 table keyed by ``EventKind``; ``step()`` seeds one round of per-node work
 and then drains ``self.queue`` in EventKind priority order
 (SYNC < SYNC_DRAIN < SEQ_DONE < PAGE_BOUNDARY < MODULE_READY < REFILL <
-LONG_TAIL < MIGRATE < NODE_FAILURE < NODE_DRAIN).  Decode completion *enqueues* its
+LONG_TAIL < NODE_SLOW < MIGRATE < NODE_FAILURE < NODE_DRAIN).  Decode
+completion *enqueues* its
 follow-up phases instead of inline-calling them, so custom policies can
 reorder, drop or wrap any phase, and cluster-sim / real-engine runs share
 one code path.  Per decode *page* (P tokens, §5.3) the default policy
@@ -34,6 +35,10 @@ dispatches:
   PAGE_BOUNDARY  — extend page allocation or YIELD (most-progress-first)
   REFILL         — COMBINE waiting sequences into the active batch
   LONG_TAIL      — PARTITION stragglers over idle devices
+  NODE_SLOW      — straggler mitigation: shed a deficit-proportional
+                   fraction of a persistently slow (but alive) node's
+                   sequences to fast survivors (checkpoint + MIGRATE,
+                   the NODE_DRAIN machinery applied partially)
   MIGRATE        — rebalance suspended sequences across nodes (FIFO;
                    ``prim.migrate`` drains the source engine first)
   NODE_FAILURE   — §5.6 recovery: land the failed node's in-flight blobs,
@@ -57,6 +62,21 @@ immediately after the dispatch that tripped it, so a node with a corrupt
 slot never decodes another page.  ``policy.recovery_choice`` hooks the
 migrate-vs-recompute cost model into the failure handler.
 
+Straggler mitigation (detect → shed → hedge)
+--------------------------------------------
+Heartbeats also carry cumulative progress counters; a ``ProgressTracker``
+turns them into per-node EWMA throughput on each node's own clock.  A
+node below ``slow_fraction`` x the fleet median for ``slow_rounds``
+consecutive rounds raises NODE_SLOW (never NODE_FAILURE — its beats
+still arrive).  ``default_node_slow`` sheds a deficit-proportional
+fraction of its sequences to the fastest underloaded survivors
+(``policy.shed_choice`` can veto per sequence); a node still flagged
+``hedge_deadline_s`` later gets every remaining resident sequence
+*hedged* — a speculative clone launched on a fast node, pinned to the
+original's token-addressable seed so it reproduces the stream bitwise.
+First finisher wins (the result always surfaces under the ORIGINAL
+seq_id); the loser is cancelled and retired.
+
 Stream-first results
 --------------------
 ``stream()`` / ``events()`` yield typed records (``TokenBlockEvent`` /
@@ -78,6 +98,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import time
 from typing import (Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple, Type, Union)
 
@@ -87,7 +108,7 @@ from repro.core.coroutine import Phase, SequenceCoroutine, Status
 from repro.core.events import (Event, EventKind, EventQueue, HealthEvent,
                                PrimitiveEvent, RuntimeRecord,
                                SeqFinishedEvent, TokenBlockEvent)
-from repro.runtime.failure import HealthMonitor
+from repro.runtime.failure import HealthMonitor, ProgressTracker
 from repro.runtime.faults import FaultPlan, TransferDeadLetter
 from repro.sampling.params import SamplingParams, derive_fork_seed
 
@@ -104,6 +125,15 @@ class SchedulerConfig:
     longtail_min_remaining: int = 64
     migrate_imbalance: int = 2       # min queue difference to migrate
     max_partition_group: int = 8
+    # ---- straggler mitigation (detect -> shed -> hedge) ------------------
+    mitigate_stragglers: bool = True
+    slow_fraction: float = 0.5       # flag below this x fleet-median EWMA
+    slow_rounds: int = 3             # K consecutive deficient rounds
+    slow_cooldown: int = 10          # rounds before a shed node re-flags
+    slow_recover_fraction: float = 0.8   # hysteresis: unflag above this
+    slow_ewma_alpha: float = 0.5
+    max_shed_fraction: float = 0.75  # cap on the shed fraction
+    hedge_deadline_s: float = 5.0    # slow-node clock wait before hedging
 
 
 # ---------------------------------------------------------------------------
@@ -215,25 +245,36 @@ def default_sync_drain(sched: "CoroutineScheduler", ev: Event) -> None:
 def default_seq_done(sched: "CoroutineScheduler", ev: Event) -> None:
     """(ii) Eviction — finished sequences release device + host pages.
     Dropping host-store state consumes it: land every in-flight blob
-    first so a staged window can never resurrect an evicted sequence."""
+    first so a staged window can never resurrect an evicted sequence.
+
+    Also sweeps per-request deadlines (graceful degradation: a sequence
+    past ``sampling.deadline_s`` finishes with whatever it has,
+    ``finish_reason="deadline"``) and resolves hedge races — a finishing
+    clone surfaces through its ORIGINAL's seq_id; a finishing original
+    cancels its clone (first finisher wins)."""
     eng = sched.engine(ev.node)
     if eng is None:
         return
+    sched._check_deadlines(ev.node)
     finished = [co for co in sched.pending(ev.node, Status.ACTIVE)
                 if co.remaining == 0]
     if not finished:
         return
     eng.drain_appends()
     for co in finished:
+        if co.done:
+            continue        # resolved as a hedge loser earlier this loop
         eng.allocator.free_seq(co.seq_id)
         eng.free_slot(co)
         co.slot = None
         eng.host_store.drop(co.seq_id)
         co.finish()
-        sched.emit(SeqFinishedEvent(co.seq_id, ev.node,
-                                    finish_reason=co.finish_reason,
-                                    n_generated=len(co.generated),
-                                    sct_s=co.sct()))
+        winner = sched._resolve_hedge(co)
+        if winner is not None:
+            sched.emit(SeqFinishedEvent(winner.seq_id, winner.node,
+                                        finish_reason=winner.finish_reason,
+                                        n_generated=len(winner.generated),
+                                        sct_s=winner.sct()))
 
 
 def default_page_boundary(sched: "CoroutineScheduler", ev: Event) -> None:
@@ -308,6 +349,77 @@ def default_migrate(sched: "CoroutineScheduler", ev: Event) -> None:
             sched.log.append(f"migrate seq={co.seq_id} {hi}->{lo}")
             sched.emit(PrimitiveEvent(co.seq_id, lo, primitive="migrate",
                                       detail=(hi, lo)))
+
+
+def default_node_slow(sched: "CoroutineScheduler", ev: Event) -> None:
+    """Straggler shedding: a live node fell below ``slow_fraction`` x the
+    fleet-median throughput for ``slow_rounds`` rounds (ProgressTracker).
+    Checkpoint (YIELD) and MIGRATE a fraction of its resident sequences —
+    proportional to the throughput deficit, capped at
+    ``max_shed_fraction`` — to the fastest underloaded survivors.  This is
+    the NODE_DRAIN machinery applied *partially*: the node stays in
+    rotation with a lighter load, and a post-shed cooldown keeps its
+    still-polluted EWMA from re-flagging it immediately.
+    ``policy.shed_choice`` can veto individual moves (mirror of
+    ``recovery_choice``)."""
+    eng = sched.engine(ev.node)
+    if eng is None or len(sched.engines) < 2:
+        return
+    tr = sched.progress
+    survivors = [e for e in sched.engines
+                 if e.node_id != ev.node and not tr.is_flagged(e.node_id)]
+    if not survivors:
+        sched.log.append(f"node_slow node={ev.node} refused: no fast "
+                         "survivor")
+        return
+    # arm the hedge deadline on the slow node's own clock — if shedding
+    # does not clear the flag by then, the stragglers get cloned
+    sched._slow_since.setdefault(ev.node, eng.clock())
+    live = [c for c in sched.cos.values()
+            if c.node == ev.node and not c.done and c.remaining > 0]
+    deficit = tr.deficit(ev.node)
+    frac = min(deficit, sched.cfg.max_shed_fraction)
+    n_shed = min(int(round(len(live) * frac)), len(live))
+    if n_shed <= 0:
+        tr.start_cooldown(ev.node, sched.ticks)
+        return
+    eng.drain_appends()     # land in-flight KV before checkpoints move
+
+    def load(e):
+        return sum(1 for c in sched.cos.values()
+                   if c.node == e.node_id and not c.done)
+
+    choose = sched.policy.shed_choice
+    moved = 0
+    # most-remaining-first: the longest tails gain the most from
+    # finishing on a fast node
+    for co in sorted(live, key=lambda c: -c.remaining):
+        if moved >= n_shed:
+            break
+        dst = max(survivors,
+                  key=lambda e: tr.rate(e.node_id) / (1.0 + load(e)))
+        if choose is not None and choose(sched, co, eng, dst) != "shed":
+            continue
+        if co.status == Status.ACTIVE:
+            prim.yield_(co, eng)
+            sched.emit(PrimitiveEvent(co.seq_id, ev.node, primitive="yield",
+                                      detail="shed"))
+        co.partition_group = None
+        try:
+            prim.migrate(co, eng, dst)
+        except TransferDeadLetter:
+            # the blob never moved; the post-dispatch dead-letter sweep
+            # escalates this node to NODE_FAILURE, which supersedes a shed
+            sched.log.append(f"shed migrate dead-letter seq={co.seq_id}")
+            return
+        moved += 1
+        sched.emit(PrimitiveEvent(co.seq_id, dst.node_id,
+                                  primitive="migrate", detail="shed"))
+    sched.sheds += 1
+    sched.shed_moved += moved
+    tr.start_cooldown(ev.node, sched.ticks)
+    sched.log.append(f"node_slow node={ev.node} shed={moved}/{len(live)} "
+                     f"deficit={deficit:.2f}")
 
 
 def default_node_failure(sched: "CoroutineScheduler", ev: Event) -> None:
@@ -449,7 +561,10 @@ class SchedulerPolicy:
     ``recovery_choice`` is the §5.6 migrate-vs-recompute cost-model hook
     consulted by ``default_node_failure`` for every eligible sequence:
     ``(sched, co, failed_engine, dst_engine) -> "migrate" | "recompute"``
-    (None = always migrate when eligible)."""
+    (None = always migrate when eligible).  ``shed_choice`` is its
+    straggler-shedding mirror, consulted by ``default_node_slow`` per
+    candidate move: ``(sched, co, slow_engine, dst_engine) -> "shed" |
+    "keep"`` (None = always shed up to the deficit fraction)."""
     sync: Handler = default_sync
     sync_drain: Handler = default_sync_drain
     seq_done: Handler = default_seq_done
@@ -457,10 +572,12 @@ class SchedulerPolicy:
     module_ready: Handler = default_module_ready
     refill: Handler = default_refill
     long_tail: Handler = default_long_tail
+    node_slow: Handler = default_node_slow
     migrate: Handler = default_migrate
     node_failure: Handler = default_node_failure
     node_drain: Handler = default_node_drain
     recovery_choice: Optional[Callable] = None
+    shed_choice: Optional[Callable] = None
 
     def table(self) -> Dict[EventKind, Handler]:
         t = {EventKind.SYNC: self.sync,
@@ -470,6 +587,7 @@ class SchedulerPolicy:
              EventKind.MODULE_READY: self.module_ready,
              EventKind.REFILL: self.refill,
              EventKind.LONG_TAIL: self.long_tail,
+             EventKind.NODE_SLOW: self.node_slow,
              EventKind.MIGRATE: self.migrate,
              EventKind.NODE_FAILURE: self.node_failure,
              EventKind.NODE_DRAIN: self.node_drain}
@@ -513,6 +631,22 @@ class CoroutineScheduler:
         self._all_engines: List = list(self.engines)
         self.health_failovers = 0       # NODE_FAILUREs from missed beats
         self.dead_letter_failovers = 0  # NODE_FAILUREs from dead letters
+        # ---- straggler mitigation: detect -> shed -> hedge ---------------
+        self.progress = ProgressTracker(
+            slow_fraction=self.cfg.slow_fraction,
+            slow_rounds=self.cfg.slow_rounds,
+            cooldown=self.cfg.slow_cooldown,
+            recover_fraction=self.cfg.slow_recover_fraction,
+            ewma_alpha=self.cfg.slow_ewma_alpha)
+        self._slow_since: Dict[int, float] = {}   # node -> clock at flag
+        self.hedged: Dict[int, int] = {}          # original -> live clone
+        self.hedge_origin: Dict[int, int] = {}    # live clone -> original
+        self.sheds = 0                  # NODE_SLOW sheds executed
+        self.shed_moved = 0             # sequences moved off slow nodes
+        self.hedges_launched = 0
+        self.hedges_won = 0             # clone finished before original
+        self.hedges_lost = 0            # original beat its clone
+        self.hedges_resolved = 0        # clones retired (won or lost)
 
     # ------------------------------------------------------------------ API
     def submit(self, prompts: Sequence[Sequence[int]],
@@ -696,7 +830,12 @@ class CoroutineScheduler:
         monitor (§5.6).  A missing beat (dead/suppressed node) counts a
         miss; ``dead_after`` consecutive misses fire ``_on_health_failure``
         which enqueues NODE_FAILURE itself.  Collection never dispatches —
-        the failure event rides the normal priority drain."""
+        the failure event rides the normal priority drain.
+
+        The same beats feed the ``ProgressTracker``: a beat that still
+        ARRIVES but shows lagging progress raises NODE_SLOW (shedding),
+        never NODE_FAILURE — slow is not dead."""
+        mitigate = self.cfg.mitigate_stragglers
         for e in list(self.engines):
             if e not in self._all_engines:
                 self._all_engines.append(e)     # elastic scale-up
@@ -708,6 +847,18 @@ class CoroutineScheduler:
                 self.health.miss(e.node_id)
             else:
                 self.health.report(hb)
+                if mitigate:
+                    self.progress.observe(hb)
+        if not mitigate:
+            return
+        for node in self.progress.evaluate(
+                self.ticks, [e.node_id for e in self.engines]):
+            self.log.append(f"slow_flag node={node} "
+                            f"rate={self.progress.rate(node):.1f}")
+            self.emit(HealthEvent(-1, node, reason="slow",
+                                  detail=self.progress.rate(node)))
+            self.queue.push(EventKind.NODE_SLOW, node, payload="progress")
+        self._sweep_hedges()
 
     def _on_health_failure(self, node: int) -> None:
         """HealthMonitor callback: a node stopped heartbeating — escalate
@@ -717,6 +868,157 @@ class CoroutineScheduler:
         self.emit(HealthEvent(-1, node, reason="heartbeat",
                               detail="missed heartbeats"))
         self.queue.push(EventKind.NODE_FAILURE, node, payload="health")
+
+    # -------------------------------------------- deadlines + hedged tails
+    def _check_deadlines(self, node: int) -> None:
+        """Graceful degradation: mark sequences past their per-request
+        ``deadline_s`` (wall clock since submit) as deadlined — their
+        ``remaining`` collapses to 0 and the normal SEQ_DONE eviction
+        finishes them with ``finish_reason="deadline"``.  A sequence that
+        has not produced a single token yet is spared: the deadline
+        truncates output, it never returns an empty success."""
+        now = time.monotonic()
+        for co in self.cos.values():
+            if (co.node != node or co.done or co.deadlined or co.stopped
+                    or not co.generated):
+                continue
+            dl = co.sampling.deadline_s
+            if dl is not None and now - co.submitted_t >= dl:
+                co.deadlined = True
+                self.log.append(f"deadline seq={co.seq_id} "
+                                f"n={len(co.generated)}")
+
+    def _sweep_hedges(self) -> None:
+        """Launch speculative clones for sequences stuck on a node that
+        has stayed slow-flagged past ``hedge_deadline_s`` on its own
+        clock.  The clone restarts from the prompt on a fast node with
+        the original's token-addressable seed pinned, so both race toward
+        the SAME token stream — whichever finishes first wins through
+        ``_resolve_hedge`` and the loser is cancelled."""
+        cfg = self.cfg
+        for node in list(self._slow_since):
+            eng = self.engine(node)
+            if eng is None or not self.progress.is_flagged(node):
+                self._slow_since.pop(node, None)    # recovered or gone
+                continue
+            if eng.clock() - self._slow_since[node] < cfg.hedge_deadline_s:
+                continue
+            fast = [e for e in self.engines if e.node_id != node
+                    and not self.progress.is_flagged(e.node_id)]
+            if not fast:
+                continue
+
+            def load(e):
+                return sum(1 for c in self.cos.values()
+                           if c.node == e.node_id and not c.done)
+
+            for co in [c for c in self.cos.values()
+                       if c.node == node and not c.done
+                       and c.remaining > 0]:
+                if (co.seq_id in self.hedged
+                        or co.seq_id in self.hedge_origin):
+                    continue        # already hedged / is itself a clone
+                dst = max(fast, key=lambda e: self.progress.rate(e.node_id)
+                          / (1.0 + load(e)))
+                self._launch_hedge(co, dst)
+
+    def _launch_hedge(self, co: SequenceCoroutine, dst) -> None:
+        sp = co.sampling
+        if sp.seed is None:
+            # pin the clone to the original's token-addressable stream:
+            # with seed=None each stream keys off its own seq_id, and the
+            # clone has a different one
+            sp = dataclasses.replace(sp, seed=sp.effective_seed(co.seq_id))
+        clone = SequenceCoroutine(
+            seq_id=self._next_id, prompt=list(co.prompt),
+            max_out=co.max_out, sampling=sp, logprobs=co.logprobs,
+            top_logprobs=co.top_logprobs, node=dst.node_id)
+        self._next_id += 1
+        self.cos[clone.seq_id] = clone
+        self.hedge_origin[clone.seq_id] = co.seq_id
+        self.hedged[co.seq_id] = clone.seq_id
+        self.hedges_launched += 1
+        self.log.append(f"hedge seq={co.seq_id} clone={clone.seq_id} "
+                        f"-> node={dst.node_id}")
+        self.emit(PrimitiveEvent(clone.seq_id, dst.node_id,
+                                 primitive="hedge", detail=co.seq_id))
+
+    def _resolve_hedge(self, co: SequenceCoroutine
+                       ) -> Optional[SequenceCoroutine]:
+        """Called for every finishing sequence: returns the coroutine
+        whose SeqFinishedEvent should surface, or None to suppress.
+
+        A finishing CLONE transplants its (bitwise-identical) result into
+        the original — BatchMaster/ledger only know the original's seq_id,
+        and the ledger's first-wins journal then dedupes exactly as for
+        any other finish.  A finishing ORIGINAL cancels its live clone."""
+        orig_id = self.hedge_origin.get(co.seq_id)
+        if orig_id is not None:             # a clone crossed the line first
+            self.hedged.pop(orig_id, None)
+            orig = self.cos.get(orig_id)
+            if orig is None or orig.done:
+                # original already surfaced (or was cancelled upstream):
+                # the clone's output is a duplicate — swallow it
+                self._drop_hedge_clone(co)
+                return None
+            before = len(orig.generated)
+            orig.generated = list(co.generated)
+            orig.token_logprobs = list(co.token_logprobs)
+            orig.top_token_logprobs = [list(r)
+                                       for r in co.top_token_logprobs]
+            orig.stopped = co.stopped
+            orig.deadlined = co.deadlined
+            self._release_residency(orig)
+            orig.node = co.node
+            orig.length = len(orig.prompt) + len(orig.generated)
+            orig.finish()
+            # the clone streamed under its own seq_id (ignored by batch
+            # consumers); re-emit the original's missing tail so ITS
+            # stream is complete before the finish record
+            self.emit_token_block(orig, before)
+            self.hedges_won += 1
+            self.log.append(f"hedge win clone={co.seq_id} orig={orig_id}")
+            self._drop_hedge_clone(co)
+            return orig
+        clone_id = self.hedged.pop(co.seq_id, None)
+        if clone_id is not None:            # original beat its hedge
+            clone = self.cos.get(clone_id)
+            if clone is not None and not clone.done:
+                self._cancel_clone(clone)
+            self.hedges_lost += 1
+        return co
+
+    def _release_residency(self, co: SequenceCoroutine) -> None:
+        """Free a losing racer's device slot, pages, and host checkpoint
+        on its current node (tolerates a node that already left
+        rotation)."""
+        eng = self.engine(co.node)
+        if eng is not None:
+            if co.status == Status.ACTIVE:
+                eng.drain_appends()
+            eng.allocator.free_seq(co.seq_id)
+            eng.free_slot(co)
+            if eng.host_store.has(co.seq_id):
+                eng.host_store.drop(co.seq_id)
+        co.slot = None
+        co.partition_group = None
+
+    def _cancel_clone(self, clone: SequenceCoroutine) -> None:
+        self._release_residency(clone)
+        clone.stopped = True
+        clone.status = Status.DONE
+        self.log.append(f"hedge cancel clone={clone.seq_id}")
+        self._drop_hedge_clone(clone)
+
+    def _drop_hedge_clone(self, clone: SequenceCoroutine) -> None:
+        """Retire a resolved clone immediately — clones never linger in
+        the pool (and are excluded from report() counts via the
+        ``hedges_resolved`` ledger)."""
+        if not clone.done:
+            clone.status = Status.DONE
+        self.hedge_origin.pop(clone.seq_id, None)
+        self.hedges_resolved += 1
+        self.retire(clone.seq_id)
 
     def _escalate_dead_letters(self) -> Iterator[RuntimeRecord]:
         """A transfer exhausted its retry budget during the last dispatch:
@@ -811,7 +1113,11 @@ class CoroutineScheduler:
         looking report can't hide unfinished sequences."""
         t1 = max((e.clock() for e in self.engines), default=0.0)
         t0 = self._t0 if self._t0 is not None else t1
-        scts = [c.sct() for c in self.cos.values() if c.sct() is not None]
+        # hedge clones are speculative duplicates, not workload: exclude
+        # live ones from the pool counts and retired ones from `retired`
+        clones = set(self.hedge_origin)
+        scts = [c.sct() for i, c in self.cos.items()
+                if c.sct() is not None and i not in clones]
         stats = {}
         for i, e in enumerate(self.engines):
             stats[f"node{i}"] = {"counts": dict(e.stats.counts),
@@ -842,13 +1148,23 @@ class CoroutineScheduler:
                                    if f),
             "drained_nodes": list(self.drained_nodes),
             "transfer": xfer,
+            "slow_flags": self.progress.flags_raised,
+            "slow_recoveries": self.progress.flags_cleared,
+            "sheds": self.sheds,
+            "shed_migrations": self.shed_moved,
+            "hedges": {"launched": self.hedges_launched,
+                       "won": self.hedges_won,
+                       "lost": self.hedges_lost},
         }
         return {
             "bct_s": t1 - t0,
             "ticks": self.ticks,
             "status": "completed" if self.all_done() else "exhausted",
-            "completed": sum(c.done for c in self.cos.values()) + self.retired,
-            "total": len(self.cos) + self.retired,
+            "completed": (sum(c.done for i, c in self.cos.items()
+                              if i not in clones)
+                          + self.retired - self.hedges_resolved),
+            "total": (len(self.cos) - len(clones)
+                      + self.retired - self.hedges_resolved),
             "mean_sct_s": sum(scts) / len(scts) if scts else 0.0,
             "primitives": stats,
             "prefix": prefix,

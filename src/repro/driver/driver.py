@@ -19,6 +19,14 @@ The loop each round:
    replica did finish a request, the recompute's duplicate row is
    refused, not double-written.
 
+Straggler awareness (driver tier): the loop keeps a per-replica EWMA of
+completion throughput on each replica's own timeline.  Dispatch is
+rate-ordered (fast replicas admit first) and a replica below the fleet
+median gets its admissions capped proportionally to its rate; one that
+stays below ``slow_replica_fraction`` x median for
+``slow_replica_rounds`` consecutive rounds is auto-drained with requeue
+— the driver-level mirror of the scheduler's NODE_SLOW shedding.
+
 ``run()`` is crash-resumable end to end: on restart the ledger replays
 only its index + tail segment, the source skips finished ids, and the
 final merged output (input order, atomic rename) is byte-identical to
@@ -50,6 +58,11 @@ class DriverConfig:
     rotate_bytes: int = 64 << 20
     fsync_every: int = 64
     timeline_every: int = 1     # sample (now, completed) every N rounds
+    # ---- replica-tier straggler mitigation -------------------------------
+    rebalance: bool = True          # rate-aware dispatch + slow auto-drain
+    rebalance_alpha: float = 0.3    # per-replica throughput EWMA smoothing
+    slow_replica_fraction: float = 0.5   # slow when below this x median
+    slow_replica_rounds: int = 25   # consecutive rounds before auto-drain
 
 
 @dataclasses.dataclass
@@ -59,6 +72,7 @@ class DriverResult:
     skipped_resume: int         # input lines already in the ledger
     requeued: int               # requests recycled through drains
     auto_drained: int           # replicas retired by the health trigger
+    slow_drained: int           # replicas retired by the throughput trigger
     scale_ups: int
     peak_resident: int          # max parsed requests alive at once
     rounds: int
@@ -96,7 +110,13 @@ class StreamingJobDriver:
         self.partials_journaled = 0
         self.requeued = 0
         self.auto_drained = 0
+        self.slow_drained = 0
         self.scale_ups = 0
+        # per-replica throughput EWMA (completions / replica-second on the
+        # replica's own timeline) — the driver-tier straggler detector
+        self._rep_rate: Dict[int, float] = {}
+        self._rep_last: Dict[int, tuple] = {}   # rid -> (completed, now)
+        self._rep_slow: Dict[int, int] = {}     # rid -> consecutive rounds
         self.peak_resident = 0
         self.rounds = 0
         self.timeline: List[Dict[str, float]] = []
@@ -165,11 +185,54 @@ class StreamingJobDriver:
         if budget > 0 and not self.source.exhausted:
             self._window.extend(self.source.take(budget))
 
-    def _dispatch(self) -> None:
+    def _update_rates(self) -> None:
+        """Refresh each replica's throughput EWMA from this round's
+        (completed, now) delta on ITS OWN timeline.  An idle replica
+        (nothing in flight) contributes no evidence — idle is not slow."""
         for r in self._open_replicas():
+            now = r.now()
+            prev = self._rep_last.get(r.rid)
+            self._rep_last[r.rid] = (r.completed, now)
+            if prev is None:
+                continue
+            dc, dt = r.completed - prev[0], now - prev[1]
+            if dt <= 0 or (dc == 0 and r.in_flight() == 0):
+                continue
+            rate = dc / dt
+            old = self._rep_rate.get(r.rid)
+            a = self.cfg.rebalance_alpha
+            self._rep_rate[r.rid] = rate if old is None else (
+                a * rate + (1.0 - a) * old)
+
+    def _rate_median(self) -> Optional[float]:
+        rates = sorted(self._rep_rate[r.rid] for r in self._open_replicas()
+                       if r.rid in self._rep_rate)
+        if len(rates) < 2:
+            return None     # one replica has no peers to lag
+        mid = len(rates) // 2
+        return (rates[mid] if len(rates) % 2
+                else 0.5 * (rates[mid - 1] + rates[mid]))
+
+    def _dispatch(self) -> None:
+        """Rate-ordered admission: fast replicas pull from the window
+        first, and a below-median replica's admissions are capped
+        proportionally to its rate — new work flows away from stragglers
+        without starving them entirely."""
+        reps = self._open_replicas()
+        med = self._rate_median() if self.cfg.rebalance else None
+        if med is not None:
+            # unknown-rate replicas (just spawned) sort as fast: they get
+            # a full share until they produce evidence
+            reps = sorted(reps, key=lambda r: -self._rep_rate.get(
+                r.rid, float("inf")))
+        for r in reps:
             if not self._window:
                 break
             n = min(r.headroom(), len(self._window))
+            if med is not None and med > 0 and n > 0:
+                rate = self._rep_rate.get(r.rid)
+                if rate is not None and rate < med:
+                    n = max(1, int(n * rate / med))
             if n > 0:
                 r.admit([self._window.popleft() for _ in range(n)])
 
@@ -205,6 +268,27 @@ class StreamingJobDriver:
                 self.auto_drained += 1
                 self.log.append(f"auto-drain replica={r.rid} (unhealthy)")
                 self.drain(r.rid, requeue=True)
+        if not self.cfg.rebalance:
+            return
+        med = self._rate_median()
+        if med is None or med <= 0:
+            return
+        for r in self._open_replicas():
+            rate = self._rep_rate.get(r.rid)
+            if rate is None or r.draining:
+                continue
+            if rate < self.cfg.slow_replica_fraction * med:
+                self._rep_slow[r.rid] = self._rep_slow.get(r.rid, 0) + 1
+                if (self._rep_slow[r.rid] >= self.cfg.slow_replica_rounds
+                        and len(self._open_replicas()) > 1):
+                    self.slow_drained += 1
+                    self._rep_slow.pop(r.rid, None)
+                    self._rep_rate.pop(r.rid, None)
+                    self.log.append(f"auto-drain replica={r.rid} (slow: "
+                                    f"{rate:.1f} vs median {med:.1f})")
+                    self.drain(r.rid, requeue=True)
+            else:
+                self._rep_slow[r.rid] = 0
 
     def run(self, on_round: Optional[Callable[["StreamingJobDriver", int],
                                               None]] = None) -> DriverResult:
@@ -225,6 +309,8 @@ class StreamingJobDriver:
                 # every replica died/drained with work left: respawn one
                 self.log.append("respawn: no open replicas, work remains")
                 self.scale_up()
+            if self.cfg.rebalance:
+                self._update_rates()
             self._dispatch()
             self._pump_all()
             self._health_sweep()
@@ -250,7 +336,8 @@ class StreamingJobDriver:
         return DriverResult(
             status=status, completed=self.completed,
             skipped_resume=self.source.skipped, requeued=self.requeued,
-            auto_drained=self.auto_drained, scale_ups=self.scale_ups,
+            auto_drained=self.auto_drained, slow_drained=self.slow_drained,
+            scale_ups=self.scale_ups,
             peak_resident=self.peak_resident, rounds=self.rounds,
             makespan_s=self.sim_now(), merged_path=self.output_path,
             merged_records=merged, report=rep)
@@ -276,11 +363,18 @@ class StreamingJobDriver:
         per = {r.rid: r.report() for r in self.replicas}
         rob = {"health_failovers": 0, "dead_letter_failovers": 0,
                "failed_nodes": {}, "drained_nodes": {},
-               "transfer": {"retries": 0, "timeouts": 0, "dead_letters": 0}}
+               "transfer": {"retries": 0, "timeouts": 0, "dead_letters": 0},
+               "slow_flags": 0, "sheds": 0, "shed_migrations": 0,
+               "hedges_launched": 0, "hedges_won": 0}
         for rid, rep in per.items():
             rb = rep.get("robustness", {})
             rob["health_failovers"] += rb.get("health_failovers", 0)
             rob["dead_letter_failovers"] += rb.get("dead_letter_failovers", 0)
+            rob["slow_flags"] += rb.get("slow_flags", 0)
+            rob["sheds"] += rb.get("sheds", 0)
+            rob["shed_migrations"] += rb.get("shed_migrations", 0)
+            rob["hedges_launched"] += rb.get("hedges", {}).get("launched", 0)
+            rob["hedges_won"] += rb.get("hedges", {}).get("won", 0)
             if rb.get("failed_nodes"):
                 rob["failed_nodes"][rid] = rb["failed_nodes"]
             if rb.get("drained_nodes"):
@@ -292,6 +386,9 @@ class StreamingJobDriver:
             "skipped_resume": self.source.skipped,
             "requeued": self.requeued,
             "auto_drained": self.auto_drained,
+            "slow_drained": self.slow_drained,
+            "replica_rates": {rid: round(v, 3)
+                              for rid, v in self._rep_rate.items()},
             "scale_ups": self.scale_ups,
             "peak_resident": self.peak_resident,
             "window": self.cfg.window,
@@ -310,7 +407,8 @@ class StreamingJobDriver:
                        "duplicates_refused": self.ledger.duplicates_refused,
                        "partials_journaled": self.partials_journaled,
                        "partial_duplicates_refused":
-                           self.ledger.partial_duplicates_refused},
+                           self.ledger.partial_duplicates_refused,
+                       "partial_gaps": self.ledger.partial_gaps},
             "scheduler_reports": per,
             "log_tail": self.log[-20:],
         }

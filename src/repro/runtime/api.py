@@ -55,7 +55,9 @@ class BatchRequest:
             presence_penalty=float(body.get("presence_penalty", 0.0)),
             frequency_penalty=float(body.get("frequency_penalty", 0.0)),
             seed=body.get("seed"),
-            stop=tuple(body.get("stop", ())))
+            stop=tuple(body.get("stop", ())),
+            deadline_s=(float(body["deadline_s"])
+                        if body.get("deadline_s") is not None else None))
         return cls(custom_id=d.get("custom_id", str(uuid.uuid4())),
                    prompt=body["prompt"],
                    max_tokens=int(body.get("max_tokens", 128)),

@@ -72,6 +72,13 @@ class SimEngine:
         self.stats = PrimitiveStats()
         self.vclock = 0.0
         self.busy_s = 0.0
+        self.decode_steps = 0           # cumulative decode steps run
+        self.tokens_out = 0.0           # cumulative tokens emitted — the
+        #                                 heartbeat progress counter; raw
+        #                                 counts, because an injected
+        #                                 straggler inflates the vclock and
+        #                                 the ProgressTracker's tokens/vclock
+        #                                 rate drops by the same factor
         self.prefill_tokens = 0         # prompt tokens actually computed
         self.prefill_tokens_saved = 0   # served from fork dedupe / the index
         self.prefill_s = 0.0            # §5.4-model seconds spent in prefill
@@ -110,7 +117,9 @@ class SimEngine:
                 self.faults.dead or self.faults.heartbeat_suppressed())):
             return None
         return Heartbeat(self.node_id, self.vclock,
-                         [DeviceStatus(d) for d in range(self.num_devices)])
+                         [DeviceStatus(d) for d in range(self.num_devices)],
+                         decode_steps=self.decode_steps,
+                         tokens=self.tokens_out)
 
     def transfer(self, kind: str, fn):
         """Guarded transfer; retry backoff advances the virtual clock
@@ -185,6 +194,7 @@ class SimEngine:
                 dt *= f         # same tokens, just slower — determinism
         self.vclock += dt
         self.busy_s += dt
+        self.decode_steps += steps
         for c in active:
             n = min(steps, c.remaining)
             start = len(c.generated)
@@ -193,6 +203,7 @@ class SimEngine:
             c.stopped = c.stopped or hit
             c.generated.extend(toks)
             c.length += len(toks)
+            self.tokens_out += len(toks)
             self._sim_append_logprobs(c, start, toks)
         # host-store metadata so migrate/refill see real lengths
         for c in active:
@@ -355,6 +366,7 @@ class SimEngine:
             co.length = co.prompt_len
             co.last_token = self._sim_token(co, 0)
             co.generated.append(co.last_token)
+            self.tokens_out += 1
             self._sim_append_logprobs(co, 0, [co.last_token])
             if co.last_token in co.sampling.stop:
                 co.stopped = True

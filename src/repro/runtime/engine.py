@@ -234,6 +234,13 @@ class NodeEngine:
                           if module_granularity else None)
         self.b_attn = b_attn or max_active
         self.decode_steps = 0
+        self.tokens_out = 0.0       # cumulative effective tokens emitted —
+        #                             heartbeat progress counter; an injected
+        #                             straggler divides the increment by its
+        #                             factor (the fault is honored where it
+        #                             is observed: a real node cannot be
+        #                             slowed deterministically, so its beat
+        #                             under-reports progress instead)
         self.prefill_tokens = 0
         self.prefill_tokens_saved = 0   # prompt tokens served from shared KV
         self.d2h_transfers = 0      # device→host copies through _to_host
@@ -285,7 +292,9 @@ class NodeEngine:
                 self.faults.dead or self.faults.heartbeat_suppressed()):
             return None
         return Heartbeat(self.node_id, self.clock(),
-                         [DeviceStatus(d) for d in range(self.num_devices)])
+                         [DeviceStatus(d) for d in range(self.num_devices)],
+                         decode_steps=self.decode_steps,
+                         tokens=self.tokens_out)
 
     def transfer(self, kind: str, fn):
         """Run one risky host transfer through the retry/timeout/dead-
@@ -506,6 +515,7 @@ class NodeEngine:
             # a real node can't be slowed deterministically — count the
             # affected steps so tests/telemetry see the straggler window
             self.straggler_steps += steps
+        tot0 = sum(len(c.generated) for c in active)
         sampled = any(not c.sampling.is_greedy_default for c in active)
         want_lp = [c for c in active if c.logprobs]
         lp_k = max(c.top_logprobs for c in want_lp) if want_lp else None
@@ -514,7 +524,9 @@ class NodeEngine:
         flags = (smp.flags_for([c.sampling for c in active],
                                T.padded_vocab(self.cfg)) if sampled else None)
         if not self.fused and not sampled:
-            return self._decode_page_looped(active, P, lp_k)
+            self._decode_page_looped(active, P, lp_k)
+            self._account_progress(active, tot0)
+            return
         # exact step count via pow2 decomposition (40 -> 32+8): each chunk
         # is a cached scan executable (≤ log2(P) distinct sizes), chunks
         # chain on device, blocks concatenate on device -> no masked tail
@@ -563,6 +575,20 @@ class NodeEngine:
         else:
             block_np = np.concatenate(blocks)
         self._apply_block(active, block_np, steps)
+        self._account_progress(active, tot0)
+
+    def _account_progress(self, active: Sequence[SequenceCoroutine],
+                          tot0: int) -> None:
+        """Advance the heartbeat progress counter by this page's emitted
+        tokens.  An injected straggler divides the credit by its factor —
+        the engine cannot actually run slower, so the fault is honored at
+        the observation boundary: the node's beats under-report progress
+        exactly as a real 4x-slow node's would."""
+        emitted = sum(len(c.generated) for c in active) - tot0
+        f = 1.0
+        if self.faults is not None:
+            f = max(self.faults.straggler_factor(), 1.0)
+        self.tokens_out += emitted / f
 
     def _apply_block(self, active: Sequence[SequenceCoroutine], block_np,
                      steps: int):
@@ -1056,6 +1082,10 @@ class NodeEngine:
             co.phase = Phase.DECODING
             co.status = Status.INACTIVE
             self.synced_len[co.seq_id] = pl
+        f = 1.0
+        if self.faults is not None:
+            f = max(self.faults.straggler_factor(), 1.0)
+        self.tokens_out += len(cos) / f     # one first token per sequence
 
 
 # NodeEngine declares conformance to the formal backend contract; the

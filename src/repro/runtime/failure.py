@@ -40,9 +40,18 @@ class DeviceStatus:
 
 @dataclasses.dataclass
 class Heartbeat:
+    """One node's per-round liveness + progress beat.
+
+    ``decode_steps`` / ``tokens`` are CUMULATIVE counters (decode steps
+    run, tokens emitted since the engine was built) — the
+    ``ProgressTracker`` differences consecutive beats against the
+    node-local clock ``t`` to get a throughput, so the beat itself stays
+    stateless and a lost beat only widens one delta window."""
     node: int
     t: float
     devices: List[DeviceStatus]
+    decode_steps: int = 0           # cumulative decode steps completed
+    tokens: float = 0.0             # cumulative effective tokens emitted
 
     @property
     def healthy(self) -> bool:
@@ -136,6 +145,119 @@ class HealthMonitor:
 
     def alive(self) -> List[int]:
         return [n for n, f in self.failed.items() if not f]
+
+
+class ProgressTracker:
+    """Per-node EWMA throughput from heartbeat progress deltas — the
+    detection half of straggler mitigation (the paper's "mitigate
+    stragglers / reallocate work across devices" claim, §4).
+
+    Each round the scheduler feeds it every heartbeat (``observe``) and
+    then asks for verdicts (``evaluate``).  A node's rate is
+    ``Δtokens / Δt`` on its OWN clock — rates are comparable across nodes
+    of one engine family even though absolute clocks are not (SimEngine
+    vclocks share the §5.4 performance model; NodeEngine deltas share the
+    wall).  A node whose EWMA stays below ``slow_fraction`` x the fleet
+    median for ``slow_rounds`` consecutive evaluations is flagged slow
+    exactly once; hysteresis (``recover_fraction`` > ``slow_fraction``)
+    unflags a recovered node, and a post-shed cooldown keeps a
+    just-shedded node from being re-flagged while its EWMA is still
+    polluted by the slow window.  Idle rounds (no new tokens) neither
+    build nor reset a slow streak — idle is not slow."""
+
+    def __init__(self, *, slow_fraction: float = 0.5, slow_rounds: int = 3,
+                 cooldown: int = 10, recover_fraction: float = 0.8,
+                 ewma_alpha: float = 0.5):
+        self.slow_fraction = slow_fraction
+        self.slow_rounds = slow_rounds
+        self.cooldown = cooldown
+        self.recover_fraction = recover_fraction
+        self.alpha = ewma_alpha
+        self.ewma: Dict[int, float] = {}
+        self.flagged: Dict[int, bool] = {}
+        self.flags_raised = 0
+        self.flags_cleared = 0
+        self._last: Dict[int, tuple] = {}       # node -> (t, tokens)
+        self._streak: Dict[int, int] = {}
+        self._cool_until: Dict[int, int] = {}
+        self._fresh: Dict[int, float] = {}      # this round's rates
+
+    def observe(self, hb: Heartbeat) -> None:
+        """Feed one heartbeat (once per node per round)."""
+        prev = self._last.get(hb.node)
+        self._last[hb.node] = (hb.t, hb.tokens)
+        if prev is None:
+            return
+        dt = hb.t - prev[0]
+        dtok = hb.tokens - prev[1]
+        if dtok <= 0 or dt <= 0:
+            return                  # idle (or clock glitch): no evidence
+        rate = dtok / dt
+        old = self.ewma.get(hb.node)
+        self.ewma[hb.node] = rate if old is None else (
+            self.alpha * rate + (1.0 - self.alpha) * old)
+        self._fresh[hb.node] = self.ewma[hb.node]
+
+    def median_rate(self) -> Optional[float]:
+        rates = sorted(self.ewma.values())
+        if len(rates) < 2:
+            return None             # a fleet of one has no peers to lag
+        n = len(rates)
+        mid = n // 2
+        return rates[mid] if n % 2 else 0.5 * (rates[mid - 1] + rates[mid])
+
+    def evaluate(self, round_no: int, nodes) -> List[int]:
+        """End-of-collection verdicts; returns nodes NEWLY flagged slow.
+        ``nodes`` is the live rotation — departed nodes are forgotten so
+        a dead straggler can't skew the median forever."""
+        alive = set(nodes)
+        for d in (self.ewma, self._last, self._streak, self.flagged,
+                  self._cool_until):
+            for n in [k for k in d if k not in alive]:
+                del d[n]
+        med = self.median_rate()
+        fresh, self._fresh = self._fresh, {}
+        if med is None or med <= 0:
+            return []
+        newly: List[int] = []
+        for node, rate in fresh.items():
+            if self.flagged.get(node):
+                if rate >= self.recover_fraction * med:
+                    self.flagged[node] = False
+                    self.flags_cleared += 1
+                    self._streak[node] = 0
+                continue
+            if round_no < self._cool_until.get(node, -1):
+                continue
+            if rate < self.slow_fraction * med:
+                self._streak[node] = self._streak.get(node, 0) + 1
+                if self._streak[node] >= self.slow_rounds:
+                    self.flagged[node] = True
+                    self.flags_raised += 1
+                    self._streak[node] = 0
+                    newly.append(node)
+            else:
+                self._streak[node] = 0
+        return newly
+
+    def is_flagged(self, node: int) -> bool:
+        return bool(self.flagged.get(node))
+
+    def start_cooldown(self, node: int, round_no: int) -> None:
+        """Arm the post-shed re-flag holdoff for ``node``."""
+        self._cool_until[node] = round_no + self.cooldown
+
+    def deficit(self, node: int) -> float:
+        """How far below the fleet median this node runs, in [0, 1] —
+        the shed fraction is proportional to it."""
+        med = self.median_rate()
+        rate = self.ewma.get(node)
+        if med is None or med <= 0 or rate is None:
+            return 0.0
+        return min(max(1.0 - rate / med, 0.0), 1.0)
+
+    def rate(self, node: int) -> float:
+        return self.ewma.get(node, 0.0)
 
 
 def recovery_choice(cfg: ModelConfig, hw: plan_lib.Hardware, *,

@@ -23,7 +23,14 @@ fault kind             honored at
                        kind raise ``TransferError`` (retried with backoff)
 ``transfer_timeout``   same, raising ``TransferTimeout``
 ``straggler``          engine runs ``factor`` x slower for ``duration``
-                       ticks (virtual clock; the real engine counts it)
+                       ticks.  SimEngine inflates its virtual clock; the
+                       real engine cannot actually slow down, so it scales
+                       its heartbeat ``tokens_out`` credit down by the
+                       factor instead — either way the node's progress
+                       rate drops by ``factor`` and the scheduler's
+                       ``ProgressTracker`` sees the straggler.  Heartbeats
+                       still ARRIVE: a straggler is slow, never dead, and
+                       must raise NODE_SLOW, not NODE_FAILURE
 ``oom``                ``acquire_slot`` refuses admissions for ``duration``
                        ticks (allocator pressure without real OOM)
 =====================  ====================================================
@@ -192,6 +199,14 @@ class FaultPlan:
                 factor=rng.choice([2.0, 4.0, 8.0]),
                 transfer_kind=rng.choice(["any", "drain", "install"])))
         return cls(faults, seed=seed)
+
+    @classmethod
+    def straggler(cls, node: int, *, at_tick: int = 1, factor: float = 4.0,
+                  duration: int = 10**9) -> "FaultPlan":
+        """One persistently slow node (default: slow forever) — the
+        canonical straggler-mitigation scenario."""
+        return cls([Fault(kind="straggler", node=node, at_tick=at_tick,
+                          factor=factor, duration=duration)])
 
     def node_view(self, node: int) -> NodeFaults:
         return NodeFaults([f for f in self.faults if f.node == node])

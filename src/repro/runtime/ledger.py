@@ -240,6 +240,9 @@ class SegmentedJobLedger:
         self.sealed_segments = 0
         self.duplicates_refused = 0
         self.partial_duplicates_refused = 0
+        self.partial_gaps = 0       # blocks journaled past the expected
+        #                             offset (should be 0: a gap means a
+        #                             producer skipped tokens)
         self._live_seg = 0
         self._seg_records = 0
         self._seg_bytes = 0
@@ -353,7 +356,10 @@ class SegmentedJobLedger:
     def record_output(self, custom_id: str, row: Dict[str, Any]) -> bool:
         """Durably append one finished row; False (nothing written) if the
         id already committed — exactly-once by first-wins, across
-        segments and across a crashed run's requeue race."""
+        segments and across a crashed run's requeue race.  The same
+        first-wins gate dedupes hedged re-execution: when the scheduler
+        races a straggler against a speculative clone, both finishers
+        surface under one custom_id and only the first commits."""
         if custom_id in self.finished:
             self.duplicates_refused += 1
             return False
@@ -396,6 +402,10 @@ class SegmentedJobLedger:
             # what is already durable, so dropping it loses nothing
             self.partial_duplicates_refused += 1
             return False
+        if offset > expected:
+            # journaled anyway (the tokens are real), but a skipped window
+            # means some producer lost blocks — surface it in the report
+            self.partial_gaps += 1
         assert self._fh is not None, "ledger not open"
         line = (json.dumps({"kind": "partial", "custom_id": custom_id,
                             "off": int(offset),

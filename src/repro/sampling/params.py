@@ -34,6 +34,11 @@ class SamplingParams:
     frequency_penalty: float = 0.0
     seed: Optional[int] = None
     stop: Tuple[int, ...] = ()        # stop token ids (emitted, then halt)
+    # host-only: wall-clock deadline (seconds since submit) after which
+    # the sequence finishes gracefully with finish_reason="deadline".
+    # Never packed to device (pack_params) and irrelevant to
+    # is_greedy_default — it shapes scheduling, not logits.
+    deadline_s: Optional[float] = None
 
     def __post_init__(self):
         if len(self.stop) > MAX_STOP_TOKENS:

@@ -201,6 +201,20 @@ def test_sim_dead_letter_escalates_to_node_failure():
     assert rb["transfer"]["dead_letters"] >= 1
 
 
+def test_sim_straggler_alone_never_escalates_to_failure():
+    """Slow is not dead: a straggler-only fault plan must never trip the
+    HealthMonitor into NODE_FAILURE — its heartbeats still arrive.  Only
+    stale_heartbeat / node_death / dead-letters may escalate."""
+    plan = FaultPlan.straggler(1, factor=8.0)       # slow forever
+    cl, rep, _ = _sim_run(plan)
+    rb = rep["robustness"]
+    assert rep["completed"] == 24
+    assert rb["health_failovers"] == 0 and rb["dead_letter_failovers"] == 0
+    assert rb["failed_nodes"] == [], \
+        "a slow node must stay in rotation, never be declared dead"
+    assert cl.engines[1].straggler_steps > 0, "fault actually armed"
+
+
 def test_sim_oom_fault_counts_rejections():
     # oversubscribe (64 seqs > 48 slots) so refill admissions land inside
     # the allocator-pressure window and get refused

@@ -1,0 +1,384 @@
+"""Straggler mitigation tests: ProgressTracker detection (EWMA +
+hysteresis + cooldown), NODE_SLOW shedding, hedged tail re-execution,
+per-request deadlines, and the driver-tier slow-replica auto-drain — all
+validated for bitwise token parity against fault-free runs."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import plan as plan_lib
+from repro.core.scheduler import (CoroutineScheduler, SchedulerConfig)
+from repro.data.pipeline import LongTailRequestStream
+from repro.driver import DriverConfig, StreamingJobDriver
+from repro.runtime.api import BatchMaster, BatchRequest
+from repro.runtime.cluster import Cluster, fixed_workload, sim_node_group
+from repro.runtime.engine import NodeEngine
+from repro.runtime.failure import Heartbeat, ProgressTracker
+from repro.runtime.faults import Fault, FaultPlan
+from repro.sampling import SamplingParams
+
+from test_driver import _assert_no_overlap, _scan_partials  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# ProgressTracker unit tests (synthetic heartbeats)
+# ---------------------------------------------------------------------------
+
+
+def _beat(tr, rnd, cumulative):
+    """Feed one round of cumulative token counters, return newly flagged."""
+    for node, tot in cumulative.items():
+        tr.observe(Heartbeat(node=node, t=float(rnd), devices=[],
+                             tokens=float(tot)))
+    return tr.evaluate(rnd, list(cumulative))
+
+
+def test_progress_tracker_flags_then_recovers():
+    tr = ProgressTracker(slow_fraction=0.5, slow_rounds=3, cooldown=0,
+                         recover_fraction=0.8, ewma_alpha=1.0)
+    tot = {0: 0.0, 1: 0.0, 2: 0.0}
+    newly = []
+    for rnd in range(1, 6):
+        tot = {0: tot[0] + 2, 1: tot[1] + 10, 2: tot[2] + 10}
+        newly.append(_beat(tr, rnd, tot))
+    # first beat is baseline-only; streak builds over rounds 2-4
+    assert newly == [[], [], [], [0], []], "flag exactly once, on round 4"
+    assert tr.is_flagged(0) and tr.flags_raised == 1
+    assert tr.deficit(0) == pytest.approx(0.8)
+    # hysteresis: node 0 speeds back up, clears above recover_fraction
+    for rnd in range(6, 9):
+        tot = {0: tot[0] + 10, 1: tot[1] + 10, 2: tot[2] + 10}
+        assert _beat(tr, rnd, tot) == []
+    assert not tr.is_flagged(0) and tr.flags_cleared == 1
+
+
+def test_progress_tracker_cooldown_blocks_reflag():
+    tr = ProgressTracker(slow_fraction=0.5, slow_rounds=1, cooldown=6,
+                         recover_fraction=0.8, ewma_alpha=1.0)
+    tot = {0: 0.0, 1: 0.0}
+    tot = {0: 2.0, 1: 20.0}
+    _beat(tr, 1, tot)
+    tot = {0: 4.0, 1: 40.0}
+    assert _beat(tr, 2, tot) == [0]
+    tr.start_cooldown(0, 2)                     # as the shed handler does
+    tr.flagged[0] = False                       # node recovered post-shed
+    flagged_at = None
+    for rnd in range(3, 12):
+        tot = {0: tot[0] + 2, 1: tot[1] + 20}
+        if _beat(tr, rnd, tot) == [0]:
+            flagged_at = rnd
+            break
+    assert flagged_at == 8, "cooldown must hold re-flag until round 2+6"
+
+
+def test_progress_tracker_idle_is_not_slow():
+    tr = ProgressTracker(slow_fraction=0.5, slow_rounds=3, cooldown=0,
+                         ewma_alpha=1.0)
+    tot = {0: 0.0, 1: 0.0}
+    for rnd in range(1, 4):                     # 2 deficient deltas
+        tot = {0: tot[0] + 2, 1: tot[1] + 20}
+        assert _beat(tr, rnd, tot) == []
+    assert _beat(tr, 4, dict(tot)) == [], \
+        "an idle round (no new tokens) is not evidence of slowness"
+    tot = {0: tot[0] + 2, 1: tot[1] + 20}
+    assert _beat(tr, 5, tot) == [0], "streak must survive the idle round"
+
+
+def test_progress_tracker_single_node_never_flags():
+    tr = ProgressTracker(slow_rounds=1, ewma_alpha=1.0)
+    tot = {0: 0.0}
+    for rnd in range(1, 8):
+        tot = {0: tot[0] + 1}
+        assert _beat(tr, rnd, tot) == []
+    assert tr.median_rate() is None, "a fleet of one has no peers to lag"
+
+
+# ---------------------------------------------------------------------------
+# SimEngine: detect -> shed, A/B vs no mitigation, bitwise parity
+# ---------------------------------------------------------------------------
+
+N_SIM, OUT_SIM = 24, 2048
+
+
+def _sim_run(fault_plan, sched_cfg=None, place=None):
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    cl = Cluster(cfg, hw, nodes=3, max_active=16, max_len=4096,
+                 fault_plan=fault_plan, sched_cfg=sched_cfg)
+    wl = fixed_workload(N_SIM, 128, OUT_SIM)
+    ids = cl.sched.submit(wl.prompts, wl.max_out)
+    if place is not None:       # explicit placement policy (skewed load)
+        for i, sid in enumerate(ids):
+            cl.sched.cos[sid].node = place[i]
+    rep = cl.sched.run(max_ticks=50000)
+    toks = {i: list(cl.sched.cos[i].generated) for i in ids}
+    return cl, rep, toks
+
+
+@pytest.fixture(scope="module")
+def sim_ab():
+    """Fault-free baseline, mitigated straggler run, unmitigated run."""
+    strag = lambda: FaultPlan.straggler(0, factor=4.0)
+    free = _sim_run(None)
+    on = _sim_run(strag())
+    off = _sim_run(strag(), SchedulerConfig(page_size=64,
+                                            mitigate_stragglers=False))
+    return {"free": free, "on": on, "off": off}
+
+
+def test_sim_straggler_detected_and_shed(sim_ab):
+    _, rep, toks = sim_ab["on"]
+    _, rep0, toks0 = sim_ab["free"]
+    assert rep["completed"] == rep0["completed"] == N_SIM
+    rb = rep["robustness"]
+    assert rb["slow_flags"] >= 1, "4x straggler must be flagged"
+    assert rb["sheds"] >= 1 and rb["shed_migrations"] >= 1
+    assert toks == toks0, "shedding must not change a single token"
+
+
+def test_sim_straggler_is_slow_not_dead(sim_ab):
+    """The slow-vs-dead split: a straggler raises NODE_SLOW, never trips
+    the HealthMonitor into NODE_FAILURE (its heartbeats still arrive)."""
+    _, rep, _ = sim_ab["on"]
+    rb = rep["robustness"]
+    assert rb["health_failovers"] == 0 and rb["dead_letter_failovers"] == 0
+    assert rb["failed_nodes"] == []
+
+
+def test_sim_mitigation_beats_no_mitigation(sim_ab):
+    """The acceptance gate: with a persistent 4x straggler, mitigation
+    must cut batch completion time >= 1.3x (paper's tail-latency claim)
+    while staying bitwise identical to the unmitigated run."""
+    _, rep_on, toks_on = sim_ab["on"]
+    _, rep_off, toks_off = sim_ab["off"]
+    assert rep_off["robustness"]["slow_flags"] == 0, "kill switch works"
+    assert toks_on == toks_off
+    speedup = rep_off["bct_s"] / rep_on["bct_s"]
+    assert speedup >= 1.3, \
+        f"mitigation speedup {speedup:.2f}x under a 4x straggler"
+
+
+# ---------------------------------------------------------------------------
+# SimEngine: hedged tail re-execution (clone wins, loser retired clean)
+# ---------------------------------------------------------------------------
+
+
+def test_sim_hedge_winner_bitwise_and_loser_clean(sim_ab):
+    """Pile 20 of 24 sequences on the slow node with shedding disabled:
+    queued sequences get speculative clones on the fast nodes, clones
+    finish first (the originals are still waiting for slots), and every
+    surfaced result is bitwise identical to the fault-free run.  Losing
+    racers must leave zero residue (slots, pages, host blobs, maps)."""
+    place = [0] * 20 + [1, 2, 1, 2]
+    cfg = SchedulerConfig(page_size=64, max_shed_fraction=0.0,
+                          hedge_deadline_s=0.0)
+    cl, rep, toks = _sim_run(FaultPlan.straggler(0, factor=4.0), cfg,
+                             place=place)
+    _, _, toks0 = sim_ab["free"]
+    rb = rep["robustness"]
+    assert rep["completed"] == N_SIM and rep["total"] == N_SIM
+    assert rb["sheds"] == 0, "max_shed_fraction=0 must disable shedding"
+    assert rb["hedges"]["launched"] >= 1
+    assert rb["hedges"]["won"] >= 1, "a queued original must lose the race"
+    assert rb["hedges"]["won"] + rb["hedges"]["lost"] == \
+        rb["hedges"]["launched"]
+    assert toks == toks0, \
+        "hedged winners must reproduce the original token streams"
+    # loser cleanup: no live clones, no orphaned residency anywhere
+    assert cl.sched.hedged == {} and cl.sched.hedge_origin == {}
+    for e in cl.engines:
+        assert dict(e.allocator.owned) == {}
+        assert not e.host_store.seqs
+        assert all(s is None for s in e.slot_owner)
+
+
+# ---------------------------------------------------------------------------
+# graceful deadline degradation (both engine families)
+# ---------------------------------------------------------------------------
+
+
+def test_sim_deadline_truncates_gracefully():
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    cl = Cluster(cfg, hw, nodes=3, max_active=16, max_len=4096)
+    wl = fixed_workload(12, 128, 256)
+    ids = cl.sched.submit(wl.prompts, wl.max_out,
+                          sampling=SamplingParams(deadline_s=0.0))
+    rep = cl.sched.run(max_ticks=5000)
+    assert rep["status"] == "completed" and rep["completed"] == 12
+    for i in ids:
+        co = cl.sched.cos[i]
+        assert co.finish_reason == "deadline"
+        assert 1 <= len(co.generated) < 256, \
+            "a deadline truncates output; it never returns empty"
+
+
+def test_real_deadline_truncates_gracefully(rng):
+    cfg = reduced_config("llama3_2_1b")
+    engines = [NodeEngine(cfg, node_id=i, max_active=3, max_len=64,
+                          page_size=8, seed=0) for i in range(2)]
+    sched = CoroutineScheduler(engines, SchedulerConfig(page_size=8))
+    prompts = [list(rng.integers(2, 100, 5)) for _ in range(4)]
+    ids = sched.submit(prompts, [24] * 4,
+                       sampling=SamplingParams(deadline_s=0.0))
+    rep = sched.run(max_ticks=500)
+    assert rep["status"] == "completed" and rep["completed"] == 4
+    for i in ids:
+        co = sched.cos[i]
+        assert co.finish_reason == "deadline"
+        assert 1 <= len(co.generated) < 24
+
+
+def test_batch_api_deadline_row():
+    req = BatchRequest.from_dict({
+        "custom_id": "slo", "body": {"prompt": [5, 6, 7], "max_tokens": 16,
+                                     "deadline_s": 0.0}})
+    assert req.sampling.deadline_s == 0.0
+    assert BatchRequest.from_dict(
+        {"custom_id": "x", "body": {"prompt": [1]}}).sampling.deadline_s \
+        is None
+    cfg = reduced_config("llama3_2_1b")
+    eng = NodeEngine(cfg, max_active=3, max_len=64, page_size=8)
+    master = BatchMaster([eng], SchedulerConfig(page_size=8))
+    bo = master.run(master.submit([req]))
+    assert bo.status == "completed"
+    row = bo.results[0]["response"]
+    assert row["finish_reason"] == "deadline"
+    assert 1 <= len(row["tokens"]) < 16
+
+
+# ---------------------------------------------------------------------------
+# NodeEngine: real-engine straggler detection + parity
+# ---------------------------------------------------------------------------
+
+
+def _real_run(fault_plan):
+    cfg = reduced_config("llama3_2_1b")
+    rng = np.random.default_rng(5)
+    engines = [NodeEngine(cfg, node_id=i, max_active=3, max_len=96,
+                          page_size=8, seed=0) for i in range(2)]
+    sched = CoroutineScheduler(engines, SchedulerConfig(page_size=8),
+                               fault_plan=fault_plan)
+    prompts = [list(rng.integers(2, 100, 5)) for _ in range(6)]
+    sps = [SamplingParams() if i % 2 == 0
+           else SamplingParams(temperature=0.8, top_k=20, seed=40 + i)
+           for i in range(6)]
+    ids = sched.submit(prompts, [64] * 6, sampling=sps)
+    rep = sched.run(max_ticks=2000)
+    return sched, rep, {i: list(sched.cos[i].generated) for i in ids}
+
+
+def test_real_straggler_flagged_never_dead_bitwise():
+    """A permanently 4x-slow real engine is flagged slow (its heartbeat
+    token credit drops), never declared dead, and the run's tokens stay
+    bitwise identical to the fault-free run."""
+    _, rep0, toks0 = _real_run(None)
+    sched, rep1, toks1 = _real_run(FaultPlan.straggler(0, factor=4.0))
+    assert rep0["completed"] == rep1["completed"] == 6
+    rb = rep1["robustness"]
+    assert rb["slow_flags"] >= 1
+    assert rb["health_failovers"] == 0 and rb["failed_nodes"] == []
+    assert toks1 == toks0, "mitigation must not change a single token"
+
+
+# ---------------------------------------------------------------------------
+# driver tier: slow replicas are rebalanced away from, then auto-drained
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def drv_parts():
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    plan = plan_lib.search_plan(cfg, hw, ctx=2048, new_tokens=1,
+                                max_active=16)
+    return cfg, hw, plan
+
+
+def _drv_factory(drv_parts):
+    cfg, hw, plan = drv_parts
+
+    def factory(rid):
+        return sim_node_group(cfg, hw, nodes=2, first_node_id=rid * 100,
+                              max_active=16, max_len=4096, page_size=64,
+                              plan=plan)
+    return factory
+
+
+def _uniform_input(tmp_path, n, max_tokens=256, seed=7):
+    rng = np.random.default_rng(seed)
+    p = str(tmp_path / "uniform.jsonl")
+    with open(p, "w") as f:
+        for i in range(n):
+            f.write(json.dumps({
+                "custom_id": f"req-{i:08d}",
+                "body": {"prompt": [int(x) for x in
+                                    rng.integers(2, 100, 16)],
+                         "max_tokens": max_tokens}}) + "\n")
+    return p
+
+
+def _slow_replica_fpf(rid):
+    if rid != 0:
+        return None
+    return FaultPlan([Fault("straggler", node=n, at_tick=1, factor=4.0,
+                            duration=10 ** 9) for n in (0, 1)])
+
+
+def test_driver_auto_drains_slow_replica(tmp_path, drv_parts):
+    """Replica 0 runs 4x slow on both its nodes (so its own scheduler
+    sees no intra-replica laggard): the driver's throughput EWMA drains
+    it, its work requeues, and the job completes exactly once."""
+    inp = _uniform_input(tmp_path, 200)
+    drv = StreamingJobDriver(
+        inp, str(tmp_path / "out.jsonl"), str(tmp_path / "led"),
+        _drv_factory(drv_parts),
+        cfg=DriverConfig(window=96, replicas=2, oversubscribe=1.0,
+                         rotate_records=64, slow_replica_rounds=5),
+        sched_cfg=SchedulerConfig(page_size=64),
+        fault_plan_factory=_slow_replica_fpf)
+    res = drv.run()
+    assert res.status == "completed" and res.merged_records == 200
+    assert res.slow_drained >= 1, "throughput trigger must drain replica 0"
+    assert res.requeued > 0, "slow drain recycles in-flight work"
+    assert res.report["slow_drained"] == res.slow_drained
+    with open(res.merged_path) as f:
+        cids = [json.loads(l)["custom_id"] for l in f]
+    assert cids == [f"req-{i:08d}" for i in range(200)], "input order"
+
+
+def test_driver_straggler_interrupt_resume_first_wins(tmp_path, drv_parts):
+    """Interrupt a mitigated straggler run mid-job, resume in a fresh
+    driver: the ledger's first-wins journal suppresses every duplicate
+    (hedge re-execution AND resume recompute) and the merged output is
+    byte-identical to an uninterrupted fault-free run."""
+    inp = _uniform_input(tmp_path, 120)
+    clean = StreamingJobDriver(
+        inp, str(tmp_path / "clean.jsonl"), str(tmp_path / "led_clean"),
+        _drv_factory(drv_parts),
+        cfg=DriverConfig(window=96, replicas=2, oversubscribe=1.0,
+                         rotate_records=64),
+        sched_cfg=SchedulerConfig(page_size=64)).run()
+    assert clean.status == "completed"
+    clean_bytes = open(clean.merged_path, "rb").read()
+
+    out, led = str(tmp_path / "faulty.jsonl"), str(tmp_path / "led_faulty")
+
+    def mk(max_rounds):
+        return StreamingJobDriver(
+            inp, out, led, _drv_factory(drv_parts),
+            cfg=DriverConfig(window=96, replicas=2, oversubscribe=1.0,
+                             rotate_records=64, max_rounds=max_rounds),
+            sched_cfg=SchedulerConfig(page_size=64),
+            fault_plan_factory=_slow_replica_fpf)
+
+    first = mk(6).run()
+    assert first.status != "completed", "run must stop mid-job"
+    assert first.merged_records < 120, "interrupted run is partial"
+    second = mk(10 ** 7).run()
+    assert second.status == "completed"
+    assert second.skipped_resume + second.completed >= 120
+    assert open(out, "rb").read() == clean_bytes
+    _assert_no_overlap(_scan_partials(led))

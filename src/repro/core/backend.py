@@ -45,6 +45,24 @@ member                    role
                           migrate, failure recovery) must force a full
                           drain first
 ``prefill(cos)``          prefill INIT coroutines, checkpoint, leave INACTIVE
+``stage_restore(co)``     issue an async host→device restore for a
+                          suspended sequence through the ring buffer (the
+                          h2d mirror of ``stage_appends``): the copy rides
+                          behind the next decode page so a later COMBINE
+                          installs without PCIe wait.  Returns True when
+                          the restore is staged (already-staged counts),
+                          False when it cannot be (no host state / ring
+                          full — the backpressure counter increments)
+``take_restore(id)``      consume a staged restore for COMBINE: returns
+                          the host slices (staleness-checked against the
+                          current host state — a checkpoint that advanced
+                          since staging invalidates the prefetch) or the
+                          synchronously-restored slices when nothing
+                          usable was staged; None only without host state
+``discard_restore(id)``   drop one staged restore + release its ring
+                          reservation (MIGRATE: the state changes nodes)
+``discard_restores()``    drop every staged restore (NODE_FAILURE: the
+                          target devices are gone)
 ``heartbeat()``           emit this round's ``Heartbeat`` (or None when the
                           node is dead / its beat is suppressed) — the
                           scheduler feeds it to the ``HealthMonitor`` every
@@ -74,6 +92,7 @@ PROTOCOL_METHODS = (
     "clock", "idle_tick", "acquire_slot", "free_slot", "extract_slot",
     "install_slot", "reconfigure_partition", "decode_page", "sync_appends",
     "stage_appends", "drain_appends", "prefill", "heartbeat", "transfer",
+    "stage_restore", "take_restore", "discard_restore", "discard_restores",
 )
 PROTOCOL_ATTRS = (
     "node_id", "max_active", "num_devices", "host_store", "allocator",
@@ -122,6 +141,14 @@ class ExecutionBackend(Protocol):
     def drain_appends(self, keep_newest: int = 0) -> None: ...
 
     def prefill(self, cos: Sequence) -> None: ...
+
+    def stage_restore(self, co) -> bool: ...
+
+    def take_restore(self, seq_id: int) -> Optional[Dict[str, Any]]: ...
+
+    def discard_restore(self, seq_id: int) -> None: ...
+
+    def discard_restores(self) -> None: ...
 
     def heartbeat(self) -> Optional[Any]: ...
 

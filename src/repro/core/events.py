@@ -29,11 +29,19 @@ class EventKind(enum.IntEnum):          # ordering = processing priority
     #                       so a staged-but-undrained blob can never be
     #                       outrun by a drop or a cross-node move
     SEQ_DONE = 2          # eviction of completed sequences (§5.3 ii)
-    PAGE_BOUNDARY = 3     # extension / yield decisions (§5.3 iii)
-    MODULE_READY = 4      # intra-forward successor enqueued by YIELD
-    REFILL = 5            # ON_REFILL_NODE (§5.1 Alg. 2)
-    LONG_TAIL = 6         # ON_LONG_TAIL -> PARTITION
-    NODE_SLOW = 7         # straggler mitigation: a live node's EWMA
+    SEQ_PREEMPT = 3       # memory-pressure governor: device pages crossed
+    #                       the allocator's high watermark — checkpoint the
+    #                       least-progress sequences to the host store and
+    #                       free their device pages.  Ranks BEFORE
+    #                       PAGE_BOUNDARY so preemption lands before the
+    #                       boundary handler tries to extend every active
+    #                       sequence by a page (the extension would fail on
+    #                       an exhausted pool that preemption can relieve)
+    PAGE_BOUNDARY = 4     # extension / yield decisions (§5.3 iii)
+    MODULE_READY = 5      # intra-forward successor enqueued by YIELD
+    REFILL = 6            # ON_REFILL_NODE (§5.1 Alg. 2)
+    LONG_TAIL = 7         # ON_LONG_TAIL -> PARTITION
+    NODE_SLOW = 8         # straggler mitigation: a live node's EWMA
     #                       throughput fell below the fleet median for K
     #                       consecutive rounds (ProgressTracker) — shed a
     #                       fraction of its work to fast survivors.  The
@@ -41,9 +49,9 @@ class EventKind(enum.IntEnum):          # ordering = processing priority
     #                       so this is distinct from NODE_FAILURE and
     #                       ranks just above MIGRATE: shedding is load
     #                       balancing with evidence, not recovery
-    MIGRATE = 8           # opportunistic load balancing
-    NODE_FAILURE = 9      # health monitor (§5.6)
-    NODE_DRAIN = 10       # elastic scale-down: graceful drain-and-handoff —
+    MIGRATE = 9           # opportunistic load balancing
+    NODE_FAILURE = 10     # health monitor (§5.6)
+    NODE_DRAIN = 11       # elastic scale-down: graceful drain-and-handoff —
     #                       checkpoint + MIGRATE every live sequence to a
     #                       survivor (zero recompute), then retire the node.
     #                       Lowest priority: a drain never outruns recovery.

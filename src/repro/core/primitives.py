@@ -64,13 +64,23 @@ def yield_(co: SequenceCoroutine, engine, *, keep_device: bool = False) -> None:
     engine.stats.record("yield", time.monotonic() - t0, nbytes)
 
 
-def combine(cos: Sequence[SequenceCoroutine], engine) -> List[SequenceCoroutine]:
+def combine(cos: Sequence[SequenceCoroutine], engine, *,
+            handoff: bool = False) -> List[SequenceCoroutine]:
     """Resume-by-combination: restore each coroutine's state into a free
     device slot and mark ACTIVE.  Returns the coroutines that were actually
-    admitted (slot/page budget permitting)."""
+    admitted (slot/page budget permitting).
+
+    A host→device restore staged earlier through the ring buffer
+    (``engine.stage_restore``, the h2d mirror of the d2h sync pipeline) is
+    consumed via ``engine.take_restore`` — its PCIe copy already rode
+    behind a decode page, so the install here pays no transfer wait.
+    ``handoff=True`` marks the prefill→decode handoff (the sequence was
+    never spilled mid-flight): it installs directly without touching the
+    restore pipeline or its wait accounting."""
     admitted = []
     t0 = time.monotonic()
     nbytes = 0
+    take = None if handoff else getattr(engine, "take_restore", None)
     for co in cos:
         if co.status not in (Status.INACTIVE, Status.INIT):
             continue
@@ -79,8 +89,11 @@ def combine(cos: Sequence[SequenceCoroutine], engine) -> List[SequenceCoroutine]
             break
         co.slot = slot
         if engine.host_store.has(co.seq_id):
-            slices = engine.host_store.restore(co.seq_id, engine.max_len)
-            nbytes += sum(v.nbytes for v in slices.values())
+            slices = take(co.seq_id) if callable(take) else None
+            if slices is None:
+                slices = engine.host_store.restore(co.seq_id, engine.max_len)
+            nbytes += sum(int(np.asarray(v).nbytes)
+                          for v in slices.values())
             engine.install_slot(co, slices)
         co.status = Status.ACTIVE
         admitted.append(co)
@@ -133,6 +146,12 @@ def migrate(co: SequenceCoroutine, src_engine, dst_engine) -> None:
     # host state crosses nodes — otherwise the moved checkpoint would lag
     # the coroutine's generated tokens
     src_engine.drain_appends()
+    # a restore staged toward the source's devices is now pointed at the
+    # wrong node — drop it (and release its ring reservation) before the
+    # state moves
+    discard = getattr(src_engine, "discard_restore", None)
+    if callable(discard):
+        discard(co.seq_id)
     nbytes = 0
     if src_engine.host_store.has(co.seq_id):
         src_store = src_engine.host_store
@@ -143,7 +162,7 @@ def migrate(co: SequenceCoroutine, src_engine, dst_engine) -> None:
             # still names the source chain), then adopt on the destination:
             # shared span pages cross once per span — a sibling that
             # migrated earlier makes this sequence's span free
-            st = src_store.seqs.pop(co.seq_id)
+            st = src_store.pop_state(co.seq_id)
             src_node = st.prefix_node
             moved["n"] = dst_engine.host_store.adopt(co.seq_id, st)
             if src_node is not None and src_store.prefix_index is not None:

@@ -13,8 +13,9 @@ Event loop
 Every phase is a handler registered on a pluggable ``SchedulerPolicy``
 table keyed by ``EventKind``; ``step()`` seeds one round of per-node work
 and then drains ``self.queue`` in EventKind priority order
-(SYNC < SYNC_DRAIN < SEQ_DONE < PAGE_BOUNDARY < MODULE_READY < REFILL <
-LONG_TAIL < NODE_SLOW < MIGRATE < NODE_FAILURE < NODE_DRAIN).  Decode
+(SYNC < SYNC_DRAIN < SEQ_DONE < SEQ_PREEMPT < PAGE_BOUNDARY <
+MODULE_READY < REFILL < LONG_TAIL < NODE_SLOW < MIGRATE < NODE_FAILURE <
+NODE_DRAIN).  Decode
 completion *enqueues* its
 follow-up phases instead of inline-calling them, so custom policies can
 reorder, drop or wrap any phase, and cluster-sim / real-engine runs share
@@ -32,8 +33,17 @@ dispatches:
                    hides the sync transfer (§5.2/§5.3 overlap)
   SEQ_DONE       — YIELD finished sequences, release pages (forces a full
                    drain first: eviction consumes host-store state)
-  PAGE_BOUNDARY  — extend page allocation or YIELD (most-progress-first)
-  REFILL         — COMBINE waiting sequences into the active batch
+  SEQ_PREEMPT    — memory-pressure governor: occupancy crossed the
+                   allocator's high watermark — checkpoint least-progress
+                   sequences to host, freeing device pages until
+                   occupancy drains under the low watermark; they
+                   re-admit via COMBINE as the watermark budget re-opens
+  PAGE_BOUNDARY  — extend page allocation or YIELD (most-progress-first);
+                   an injected ``FaultPlan.oom`` fails the extension
+                   alloc itself and preempts through the same path
+  REFILL         — COMBINE waiting sequences into the active batch,
+                   capped by the governor's watermark admission budget;
+                   prefetches h2d restores through the ring buffer
   LONG_TAIL      — PARTITION stragglers over idle devices
   NODE_SLOW      — straggler mitigation: shed a deficit-proportional
                    fraction of a persistently slow (but alive) node's
@@ -134,6 +144,12 @@ class SchedulerConfig:
     slow_ewma_alpha: float = 0.5
     max_shed_fraction: float = 0.75  # cap on the shed fraction
     hedge_deadline_s: float = 5.0    # slow-node clock wait before hedging
+    # ---- memory-pressure governor (OOM-safe admission/eviction) ----------
+    govern_memory: bool = True       # watermark-driven preempt / re-admit
+    high_watermark: Optional[float] = None   # None = keep the allocators'
+    low_watermark: Optional[float] = None    # own watermark pair
+    preempt_min_active: int = 1      # never preempt the node below this
+    restore_stage_depth: int = 4     # h2d restores prefetched per round
 
 
 # ---------------------------------------------------------------------------
@@ -142,16 +158,85 @@ class SchedulerConfig:
 # ---------------------------------------------------------------------------
 
 
+def _admit_budget(sched: "CoroutineScheduler", eng) -> int:
+    """Sequences the governor lets this node admit right now: the page
+    headroom under the allocator's high watermark, two pages per admission
+    (the §5.2 reservation).  Admission stops BEFORE the pool saturates —
+    the watermark gap is what the governor preempts into — instead of at
+    exhaustion, which is what ungoverned ``can_admit`` would do.
+
+    Ungoverned pools (``allocator.governed`` False — a modelling artifact,
+    not a configured byte budget) keep the legacy unbounded admission."""
+    alloc = eng.allocator
+    if not sched.cfg.govern_memory or not getattr(alloc, "governed", True):
+        return eng.max_active
+    headroom = int(alloc.high_watermark * alloc.total) - alloc.used
+    return max(headroom // 2, 0)
+
+
+def _restore_drained(sched: "CoroutineScheduler", eng, co) -> bool:
+    """Admission gate for spilled sequences under the governor: admit
+    when the sequence needs no h2d restore, or its staged restore has
+    drained (a decode page overlapped the copy).  A spilled sequence
+    with no prefetch in flight is staged NOW and deferred one round —
+    the stage/drain discipline that turns the evict→re-admit round trip
+    from a synchronous PCIe stall into a hidden transfer.  If the ring
+    cannot take the prefetch at all, admit synchronously rather than
+    starve."""
+    ready = getattr(eng, "restore_ready", None)
+    stage = getattr(eng, "stage_restore", None)
+    if (not callable(ready) or not callable(stage)
+            or sched.cfg.restore_stage_depth <= 0):
+        return True
+    if not eng.host_store.has(co.seq_id):
+        return True
+    if ready(co.seq_id):
+        return True
+    return not stage(co)    # staged/in flight -> defer; ring full -> sync
+
+
 def _refill_node(sched: "CoroutineScheduler", node: int, eng) -> None:
-    """COMBINE suspended sequences, then prefill INITs into free slots."""
+    """COMBINE suspended sequences, then prefill INITs into free slots.
+    Both admission paths are capped by the governor's watermark budget."""
+    budget = _admit_budget(sched, eng)
     waiting = sched.pending(node, Status.INACTIVE)
-    if waiting:
+    if waiting and budget > 0:
         waiting.sort(key=lambda c: c.submitted_t)     # FIFO fairness
-        for co in prim.combine(waiting, eng):
-            sched.emit(PrimitiveEvent(co.seq_id, node, primitive="combine"))
+        # no hard re-admission gate: the watermark budget IS the
+        # hysteresis — preemption drains occupancy to the LOW watermark,
+        # so the budget re-opens a whole high-low band of admissions at
+        # once instead of oscillating one-in-one-out at the boundary
+        if _governing(sched, eng):
+            # spilled sequences wait for their staged restore to drain
+            # behind live decode work; an idle node bootstraps by letting
+            # the FIRST spill through synchronously — there is nothing to
+            # overlap yet — and the rest hide behind its decode
+            have_active = bool(sched.pending(node, Status.ACTIVE))
+            kept = []
+            for co in waiting:
+                if not have_active:
+                    kept.append(co)
+                    have_active = True
+                elif _restore_drained(sched, eng, co):
+                    kept.append(co)
+            waiting = kept
+        admitted = prim.combine(waiting[:budget], eng)
+        budget -= len(admitted)
+        for co in admitted:
+            if co.seq_id in sched._preempted:
+                sched._preempted.discard(co.seq_id)
+                sched.gov_restores += 1
+                sched.emit(PrimitiveEvent(co.seq_id, node,
+                                          primitive="combine",
+                                          detail="restore"))
+            else:
+                sched.emit(PrimitiveEvent(co.seq_id, node,
+                                          primitive="combine"))
     inits = sched.pending(node, Status.INIT)
     if inits:
-        free_slots = eng.max_active - len(sched.pending(node, Status.ACTIVE))
+        free_slots = min(
+            eng.max_active - len(sched.pending(node, Status.ACTIVE)),
+            budget)
         if free_slots > 0:
             batch = inits[:free_slots]
             # keep fork groups whole across the cut: siblings must prefill
@@ -172,24 +257,63 @@ def _refill_node(sched: "CoroutineScheduler", node: int, eng) -> None:
                     sched.emit(PrimitiveEvent(co.seq_id, node,
                                               primitive="prefix_hit",
                                               detail=co.prefix_hit_tokens))
-            for co in prim.combine(batch, eng):
+            for co in prim.combine(batch, eng, handoff=True):
                 sched.emit(PrimitiveEvent(co.seq_id, node,
                                           primitive="combine",
                                           detail="prefill"))
 
 
+def _governing(sched: "CoroutineScheduler", eng) -> bool:
+    """True when the memory-pressure governor steers this engine: the
+    feature is on AND the pool is a real configured budget (ungoverned
+    soft pools keep legacy scheduling untouched)."""
+    return (sched.cfg.govern_memory
+            and getattr(eng.allocator, "governed", True))
+
+
+def _stage_restores(sched: "CoroutineScheduler", node: int, eng) -> None:
+    """Prefetch host→device restores for the node's next admission
+    candidates through the ring buffer (the h2d mirror of the d2h sync
+    pipeline): ``stage_restore`` issues the async ``device_put`` now, it
+    rides behind the upcoming decode page, and the later COMBINE's
+    ``take_restore`` installs without waiting on PCIe.  Same stage/drain
+    discipline as ``stage_appends``: a restore only stages when the ring
+    has room, so prefetch can never starve the sync pipeline."""
+    stage = getattr(eng, "stage_restore", None)
+    if not callable(stage) or sched.cfg.restore_stage_depth <= 0:
+        return
+    # no watermark gate here: a staged restore lands in the h2d ring, not
+    # the page pool, so the ring's byte budget is the backpressure — and
+    # a tight pool (above the high mark most rounds) is exactly when the
+    # next admission's restore must already be in flight to be hidden
+    waiting = sched.pending(node, Status.INACTIVE)
+    waiting.sort(key=lambda c: c.submitted_t)     # the refill order
+    staged = 0
+    for co in waiting:
+        if staged >= sched.cfg.restore_stage_depth:
+            break
+        if eng.host_store.has(co.seq_id) and stage(co):
+            staged += 1
+
+
 def default_refill(sched: "CoroutineScheduler", ev: Event) -> None:
     """ON_REFILL_NODE (Alg. 2 lines 7-11).  The round-seeding variant
-    (payload ``"tick"``) refills only when decode under-fills the node and
-    then enqueues the node's MODULE_READY decode work; the post-decode
-    variant refills unconditionally."""
+    (payload ``"tick"``) polls the allocator's watermark pair (enqueueing
+    SEQ_PREEMPT when occupancy crossed the high watermark — it dispatches
+    before this node's MODULE_READY decode), refills only when decode
+    under-fills the node, prefetches h2d restores for the next refill's
+    candidates, and then enqueues the node's MODULE_READY decode work;
+    the post-decode variant refills unconditionally."""
     eng = sched.engine(ev.node)
     if eng is None:
         return
     if ev.payload == _TICK:
+        if _governing(sched, eng) and eng.allocator.above_high():
+            sched.queue.push(EventKind.SEQ_PREEMPT, ev.node)
         n_active = len(sched.pending(ev.node, Status.ACTIVE))
         if n_active < sched.cfg.refill_threshold * eng.max_active:
             _refill_node(sched, ev.node, eng)
+        _stage_restores(sched, ev.node, eng)
         sched.queue.push(EventKind.MODULE_READY, ev.node)
     else:
         _refill_node(sched, ev.node, eng)
@@ -277,8 +401,63 @@ def default_seq_done(sched: "CoroutineScheduler", ev: Event) -> None:
                                         sct_s=winner.sct()))
 
 
+def default_seq_preempt(sched: "CoroutineScheduler", ev: Event) -> None:
+    """Memory-pressure governor (SEQ_PREEMPT): device-page occupancy
+    crossed the allocator's high watermark — checkpoint sequences to the
+    host store (YIELD) and free their device pages until occupancy drains
+    under the LOW watermark.
+
+    Draining the whole high→low band (not just back under high) is the
+    hysteresis: the next refill's watermark budget re-opens a band of
+    admissions at once, instead of oscillating one-in-one-out at the
+    high-watermark boundary every round.  Victim order is LEAST progress
+    first (deterministic tie-break by seq_id) — the inverse of the §5.3
+    page-exhaustion eviction: a sequence near completion will free its
+    pages on its own shortly, while the youngest would hold device pages
+    longest.  Preempted sequences re-admit through the ordinary COMBINE
+    refill as budget re-opens.  ``policy.preempt_choice`` can veto
+    individual victims, mirroring ``recovery_choice`` / ``shed_choice``."""
+    eng = sched.engine(ev.node)
+    if eng is None or not _governing(sched, eng):
+        return
+    alloc = eng.allocator
+    if not alloc.above_high():
+        return
+    active = sched.pending(ev.node, Status.ACTIVE)
+    n_active = len(active)
+    if n_active <= sched.cfg.preempt_min_active:
+        return
+    drained = False
+    choose = sched.policy.preempt_choice
+    for co in sorted(active, key=lambda c: (c.length, c.seq_id)):
+        if alloc.below_low():
+            break       # drained the whole high→low band
+        if n_active <= sched.cfg.preempt_min_active:
+            break
+        if co.done or co.status != Status.ACTIVE:
+            continue
+        if choose is not None and choose(sched, co, eng) != "preempt":
+            continue
+        if not drained:
+            eng.drain_appends()     # checkpoints consume host-store state
+            drained = True
+        sched._preempt(co, eng, "preempt")
+        n_active -= 1
+
+
 def default_page_boundary(sched: "CoroutineScheduler", ev: Event) -> None:
-    """(iii) Extension — two-page reservation; evict most-progress-first."""
+    """(iii) Extension — two-page reservation; evict most-progress-first.
+
+    An injected ``FaultPlan.oom`` makes the page-extension alloc itself
+    fail mid-decode (not just admission), and recovers through the one
+    event-loop path: the sequence is preempted (checkpoint → host store
+    → free pages) exactly like a watermark preemption and re-admits via
+    COMBINE when pressure clears.  Token output is bitwise-unchanged:
+    preemption is pure rescheduling.  REAL pool exhaustion is tolerated
+    as a soft budget here — sustained pressure is the governor's job
+    (watermark SEQ_PREEMPT keeps occupancy below the high mark before
+    extension ever fails), so a transient failed extension must not
+    thrash the batch with preempt/re-admit churn."""
     eng = sched.engine(ev.node)
     if eng is None:
         return
@@ -291,9 +470,21 @@ def default_page_boundary(sched: "CoroutineScheduler", ev: Event) -> None:
             sched.log.append(f"yield(evict) seq={victim_id}")
             sched.emit(PrimitiveEvent(victim_id, ev.node, primitive="yield",
                                       detail="evict"))
+    faults = getattr(eng, "faults", None)
+    oom = faults is not None and faults.oom_active()
+    drained = False
     for co in active:
         if not co.done and co.status == Status.ACTIVE:
-            eng.allocator.alloc(co.seq_id, 1)
+            got = None if oom else eng.allocator.alloc(co.seq_id, 1)
+            if got is not None or not oom:
+                # real exhaustion: soft budget — the governor's watermark
+                # preemption owns sustained pressure
+                continue
+            eng.oom_rejections = getattr(eng, "oom_rejections", 0) + 1
+            if not drained:
+                eng.drain_appends()
+                drained = True
+            sched._preempt(co, eng, "oom")
 
 
 def default_long_tail(sched: "CoroutineScheduler", ev: Event) -> None:
@@ -320,7 +511,7 @@ def default_long_tail(sched: "CoroutineScheduler", ev: Event) -> None:
             sched.log.append(f"partition seq={co.seq_id} group={len(group)}")
             sched.emit(PrimitiveEvent(co.seq_id, ev.node,
                                       primitive="partition", detail=group))
-            prim.combine([co], eng)
+            prim.combine([co], eng, handoff=True)
             break
 
 
@@ -448,6 +639,9 @@ def default_node_failure(sched: "CoroutineScheduler", ev: Event) -> None:
     ring = getattr(failed, "ring", None)
     if ring is not None:
         ring.reset()    # abandoned blobs must not hold staging space
+    discard_restores = getattr(failed, "discard_restores", None)
+    if callable(discard_restores):
+        discard_restores()      # staged h2d restores died with the devices
     sched.health.mark_failed(ev.node)
     sched.engines = [e for e in sched.engines if e.node_id != ev.node]
     sched.log.append(f"node_failure node={ev.node}")
@@ -564,10 +758,15 @@ class SchedulerPolicy:
     (None = always migrate when eligible).  ``shed_choice`` is its
     straggler-shedding mirror, consulted by ``default_node_slow`` per
     candidate move: ``(sched, co, slow_engine, dst_engine) -> "shed" |
-    "keep"`` (None = always shed up to the deficit fraction)."""
+    "keep"`` (None = always shed up to the deficit fraction).
+    ``preempt_choice`` is the memory-pressure mirror, consulted by
+    ``default_seq_preempt`` per watermark-preemption victim:
+    ``(sched, co, engine) -> "preempt" | "keep"`` (None = always preempt
+    least-progress-first until occupancy clears the high watermark)."""
     sync: Handler = default_sync
     sync_drain: Handler = default_sync_drain
     seq_done: Handler = default_seq_done
+    seq_preempt: Handler = default_seq_preempt
     page_boundary: Handler = default_page_boundary
     module_ready: Handler = default_module_ready
     refill: Handler = default_refill
@@ -578,11 +777,13 @@ class SchedulerPolicy:
     node_drain: Handler = default_node_drain
     recovery_choice: Optional[Callable] = None
     shed_choice: Optional[Callable] = None
+    preempt_choice: Optional[Callable] = None
 
     def table(self) -> Dict[EventKind, Handler]:
         t = {EventKind.SYNC: self.sync,
              EventKind.SYNC_DRAIN: self.sync_drain,
              EventKind.SEQ_DONE: self.seq_done,
+             EventKind.SEQ_PREEMPT: self.seq_preempt,
              EventKind.PAGE_BOUNDARY: self.page_boundary,
              EventKind.MODULE_READY: self.module_ready,
              EventKind.REFILL: self.refill,
@@ -647,6 +848,26 @@ class CoroutineScheduler:
         self.hedges_won = 0             # clone finished before original
         self.hedges_lost = 0            # original beat its clone
         self.hedges_resolved = 0        # clones retired (won or lost)
+        # ---- memory-pressure governor ------------------------------------
+        # seq_ids preempted for memory pressure (or mid-flight oom) that
+        # have not re-admitted yet (their next COMBINE is a restore)
+        self._preempted: set = set()
+        self.gov_preempts = 0           # watermark + oom preemptions
+        self.gov_restores = 0           # preempted seqs re-admitted
+        self.gov_host_spill_bytes = 0   # KV bytes checkpointed by preempts
+        if (self.cfg.high_watermark is not None
+                or self.cfg.low_watermark is not None):
+            for e in self.engines:
+                alloc = getattr(e, "allocator", None)
+                if alloc is None:
+                    continue
+                if self.cfg.high_watermark is not None:
+                    alloc.high_watermark = self.cfg.high_watermark
+                if self.cfg.low_watermark is not None:
+                    alloc.low_watermark = self.cfg.low_watermark
+                assert (0.0 < alloc.low_watermark
+                        <= alloc.high_watermark <= 1.0), (
+                    alloc.low_watermark, alloc.high_watermark)
 
     # ------------------------------------------------------------------ API
     def submit(self, prompts: Sequence[Sequence[int]],
@@ -869,6 +1090,27 @@ class CoroutineScheduler:
                               detail="missed heartbeats"))
         self.queue.push(EventKind.NODE_FAILURE, node, payload="health")
 
+    # -------------------------------------------- memory-pressure governor
+    def _preempt(self, co: SequenceCoroutine, eng, detail: str) -> None:
+        """One governor preemption: YIELD (checkpoint → host store → free
+        device pages), account the spilled bytes, and mark the sequence
+        for low-watermark re-admission.  Callers drain the engine's
+        append pipeline first."""
+        b0 = eng.stats.bytes_moved["yield"]
+        prim.yield_(co, eng)
+        spilled = eng.stats.bytes_moved["yield"] - b0
+        if spilled == 0:
+            # SimEngine checkpoints metadata only — account the modeled
+            # KV footprint instead
+            spilled = int(getattr(eng, "kv_bytes_per_token", 0) * co.length)
+        self.gov_preempts += 1
+        self.gov_host_spill_bytes += spilled
+        self._preempted.add(co.seq_id)
+        self.log.append(f"yield({detail}) seq={co.seq_id} "
+                        f"occ={eng.allocator.occupancy:.2f}")
+        self.emit(PrimitiveEvent(co.seq_id, co.node, primitive="yield",
+                                 detail=detail))
+
     # -------------------------------------------- deadlines + hedged tails
     def _check_deadlines(self, node: int) -> None:
         """Graceful degradation: mark sequences past their per-request
@@ -998,6 +1240,9 @@ class CoroutineScheduler:
                 eng.drain_appends()
             eng.allocator.free_seq(co.seq_id)
             eng.free_slot(co)
+            discard = getattr(eng, "discard_restore", None)
+            if callable(discard):
+                discard(co.seq_id)      # a staged h2d prefetch is now moot
             if eng.host_store.has(co.seq_id):
                 eng.host_store.drop(co.seq_id)
         co.slot = None
@@ -1141,6 +1386,26 @@ class CoroutineScheduler:
                     prefix["live_refs"] += idx.live_refs()
             prefix["prefill_tokens_saved"] += getattr(
                 e, "prefill_tokens_saved", 0)
+        governor = {
+            "preempts": self.gov_preempts,
+            "restores": self.gov_restores,
+            "host_spill_bytes": self.gov_host_spill_bytes,
+            "restore_stages": 0,
+            "restore_stalls": 0,
+            "restore_wait_s": 0.0,
+            "restore_stage_hidden_s": 0.0,
+            "budget_evictions": 0,
+        }
+        for e in self._all_engines:
+            governor["restore_stages"] += getattr(e, "restore_stages", 0)
+            governor["restore_stalls"] += getattr(e, "restore_stalls", 0)
+            governor["restore_wait_s"] += getattr(e, "restore_wait_s", 0.0)
+            governor["restore_stage_hidden_s"] += getattr(
+                e, "restore_stage_hidden_s", 0.0)
+            store = getattr(e, "host_store", None)
+            if store is not None:
+                governor["budget_evictions"] += getattr(
+                    store, "budget_evictions", 0)
         robustness = {
             "health_failovers": self.health_failovers,
             "dead_letter_failovers": self.dead_letter_failovers,
@@ -1155,6 +1420,7 @@ class CoroutineScheduler:
             "hedges": {"launched": self.hedges_launched,
                        "won": self.hedges_won,
                        "lost": self.hedges_lost},
+            "governor": governor,
         }
         return {
             "bct_s": t1 - t0,

@@ -112,6 +112,7 @@ class StreamingJobDriver:
         self.auto_drained = 0
         self.slow_drained = 0
         self.scale_ups = 0
+        self.budget_throttled = 0   # dispatch rounds skipped: host budget
         # per-replica throughput EWMA (completions / replica-second on the
         # replica's own timeline) — the driver-tier straggler detector
         self._rep_rate: Dict[int, float] = {}
@@ -228,6 +229,12 @@ class StreamingJobDriver:
         for r in reps:
             if not self._window:
                 break
+            if r.host_over_budget():
+                # the replica's host-spill budget is exhausted and the
+                # prefix-LRU cascade could not clear it: stop admitting
+                # here until decode drains the store — throttle, not die
+                self.budget_throttled += 1
+                continue
             n = min(r.headroom(), len(self._window))
             if med is not None and med > 0 and n > 0:
                 rate = self._rep_rate.get(r.rid)
@@ -365,9 +372,17 @@ class StreamingJobDriver:
                "failed_nodes": {}, "drained_nodes": {},
                "transfer": {"retries": 0, "timeouts": 0, "dead_letters": 0},
                "slow_flags": 0, "sheds": 0, "shed_migrations": 0,
-               "hedges_launched": 0, "hedges_won": 0}
+               "hedges_launched": 0, "hedges_won": 0,
+               "governor": {"preempts": 0, "restores": 0,
+                            "host_spill_bytes": 0, "restore_stages": 0,
+                            "restore_stalls": 0, "restore_wait_s": 0.0,
+                            "restore_stage_hidden_s": 0.0,
+                            "budget_evictions": 0}}
         for rid, rep in per.items():
             rb = rep.get("robustness", {})
+            gv = rb.get("governor", {})
+            for k in rob["governor"]:
+                rob["governor"][k] += gv.get(k, 0)
             rob["health_failovers"] += rb.get("health_failovers", 0)
             rob["dead_letter_failovers"] += rb.get("dead_letter_failovers", 0)
             rob["slow_flags"] += rb.get("slow_flags", 0)
@@ -387,6 +402,7 @@ class StreamingJobDriver:
             "requeued": self.requeued,
             "auto_drained": self.auto_drained,
             "slow_drained": self.slow_drained,
+            "budget_throttled": self.budget_throttled,
             "replica_rates": {rid: round(v, 3)
                               for rid, v in self._rep_rate.items()},
             "scale_ups": self.scale_ups,

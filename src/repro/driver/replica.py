@@ -75,6 +75,20 @@ class ReplicaHandle:
                   default=self.clock0)
         return self.join_offset + (clk - self.clock0)
 
+    def host_over_budget(self) -> bool:
+        """True while any live engine's host store remains over its byte
+        budget even after its prefix-LRU eviction cascade — the driver's
+        signal to throttle this replica's admissions (instead of letting
+        host spill grow unbounded) until decode drains the store."""
+        if self.closed:
+            return False
+        for e in self.master.live_engines(self.bid):
+            store = getattr(e, "host_store", None)
+            over = getattr(store, "over_budget", None)
+            if callable(over) and over():
+                return True
+        return False
+
     def healthy(self) -> bool:
         """False once the replica's scheduler has dead-lettered a node or
         lost every engine — the driver's auto-drain trigger."""

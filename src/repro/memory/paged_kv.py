@@ -64,20 +64,75 @@ class HostKVStore:
     """Per-node unified host store; page granularity = P tokens."""
 
     def __init__(self, page_size: int = 64, enable_prefix: bool = True,
-                 max_prefix_pages: int = 4096):
+                 max_prefix_pages: int = 4096,
+                 budget_bytes: Optional[int] = None):
         self.page_size = page_size
         self.seqs: Dict[int, SeqState] = {}
         self.prefix_index: Optional[PrefixIndex] = (
             PrefixIndex(page_size, max_prefix_pages) if enable_prefix
             else None)
         self.cow_copies = 0
+        # host-spill byte budget (None = unbounded): exceeding it cascades
+        # to prefix-span LRU eviction (enforce_budget); a store still over
+        # budget afterwards is the driver tier's throttle signal
+        self.budget_bytes = budget_bytes
+        self.budget_evictions = 0       # spans evicted by the byte budget
+        # incrementally-maintained mirror of the nbytes() dedup walk —
+        # the governor polls it every round, so it must be O(1)
+        self._nbytes = 0
+        self._page_refs: Dict[int, int] = {}    # id(page) -> list refs
+
+    # -- incremental byte accounting ----------------------------------------
+    def _ref_page(self, p: np.ndarray) -> None:
+        k = id(p)
+        c = self._page_refs.get(k, 0)
+        if c == 0:
+            self._nbytes += int(p.nbytes)
+        self._page_refs[k] = c + 1
+
+    def _unref_page(self, p: np.ndarray) -> None:
+        k = id(p)
+        c = self._page_refs.get(k, 0)
+        if c <= 1:
+            self._page_refs.pop(k, None)
+            if c == 1:
+                self._nbytes -= int(p.nbytes)
+        else:
+            self._page_refs[k] = c - 1
+
+    def _ref_state(self, st: SeqState) -> None:
+        for ps in st.pages.values():
+            for p in ps:
+                self._ref_page(p)
+        self._nbytes += sum(int(w.nbytes) for w in st.whole.values())
+
+    def _unref_state(self, st: SeqState) -> None:
+        for ps in st.pages.values():
+            for p in ps:
+                self._unref_page(p)
+        self._nbytes -= sum(int(w.nbytes) for w in st.whole.values())
+
+    def _set_whole(self, st: SeqState, name: str, arr: np.ndarray) -> None:
+        old = st.whole.get(name)
+        if old is not None:
+            self._nbytes -= int(old.nbytes)
+        st.whole[name] = arr
+        self._nbytes += int(arr.nbytes)
 
     # -- bookkeeping --------------------------------------------------------
     def has(self, seq_id: int) -> bool:
         return seq_id in self.seqs
 
     def nbytes(self) -> int:
-        """Resident bytes; a page shared by N sequences counts once."""
+        """Resident bytes; a page shared by N sequences counts once.
+        O(1): reads the incrementally-maintained counter (see
+        ``nbytes_walk`` for the recomputed ground truth)."""
+        return self._nbytes
+
+    def nbytes_walk(self) -> int:
+        """Recompute resident bytes by walking every SeqState (dedup by
+        page identity) — the invariant ``nbytes() == nbytes_walk()`` is
+        asserted in tests; production callers use the O(1) counter."""
         seen, n = set(), 0
         for s in self.seqs.values():
             for ps in s.pages.values():
@@ -88,6 +143,36 @@ class HostKVStore:
             n += sum(w.nbytes for w in s.whole.values())
         return n
 
+    def host_bytes(self) -> int:
+        """Total host KV footprint the byte budget governs: sequence-
+        resident bytes plus span pages cached in the prefix trie.
+        Conservative: a page both sequence-bound and trie-resident counts
+        in both terms, so the budget can never under-estimate."""
+        n = self._nbytes
+        if self.prefix_index is not None:
+            n += self.prefix_index.cached_nbytes
+        return n
+
+    def over_budget(self) -> bool:
+        return (self.budget_bytes is not None
+                and self.host_bytes() > self.budget_bytes)
+
+    def enforce_budget(self) -> int:
+        """Byte-budget cascade: evict LRU zero-ref prefix spans until the
+        footprint fits (or the trie has nothing evictable).  Returns spans
+        evicted.  A store still over budget afterwards carries only live
+        sequence state — the driver tier throttles admissions instead of
+        dying."""
+        if self.budget_bytes is None or self.prefix_index is None:
+            return 0
+        evicted = 0
+        while self.host_bytes() > self.budget_bytes:
+            if not self.prefix_index.evict_lru():
+                break
+            evicted += 1
+        self.budget_evictions += evicted
+        return evicted
+
     def num_pages(self, seq_id: int) -> int:
         s = self.seqs[seq_id]
         return max((len(ps) for ps in s.pages.values()), default=0)
@@ -97,10 +182,21 @@ class HostKVStore:
         reference exactly once — a duplicate drop (forked teardown racing a
         recovery path) finds nothing to pop and touches no refcount."""
         st = self.seqs.pop(seq_id, None)
-        if st is not None and st.prefix_node is not None \
-                and self.prefix_index is not None:
-            self.prefix_index.release(st.prefix_node)
-            st.prefix_node = None
+        if st is not None:
+            self._unref_state(st)
+            if st.prefix_node is not None and self.prefix_index is not None:
+                self.prefix_index.release(st.prefix_node)
+                st.prefix_node = None
+
+    def pop_state(self, seq_id: int) -> Optional[SeqState]:
+        """MIGRATE src side: detach a SeqState without touching its span
+        refcount (the caller releases the span only after the destination
+        adopted it, so shared ancestors never transit refcount zero
+        mid-move)."""
+        st = self.seqs.pop(seq_id, None)
+        if st is not None:
+            self._unref_state(st)
+        return st
 
     # -- shared-prefix spans -------------------------------------------------
     def publish_prefix(self, seq_id: int, tokens) -> Optional[List[PrefixNode]]:
@@ -122,7 +218,11 @@ class HostKVStore:
         for i, nd in enumerate(chain):
             for name, page in nd.pages.items():
                 if name in st.pages and i < len(st.pages[name]):
-                    st.pages[name][i] = page     # swap to canonical object
+                    old = st.pages[name][i]
+                    if old is not page:     # dedupe to the canonical object
+                        self._ref_page(page)
+                        self._unref_page(old)
+                    st.pages[name][i] = page
         self.bind_prefix(seq_id, chain)
         return chain
 
@@ -153,7 +253,9 @@ class HostKVStore:
             st.pages[name] = list(ps[:k]) + [p.copy() for p in ps[k:]]
         st.whole = {n: w.copy() for n, w in src.whole.items()}
         self.seqs[dst_seq_id] = st
+        self._ref_state(st)
         self.bind_prefix(dst_seq_id, chain)
+        self.enforce_budget()
         return st
 
     def attach_shared(self, seq_id: int, chain: List[PrefixNode]) -> SeqState:
@@ -167,6 +269,7 @@ class HostKVStore:
             if all(name in nd.pages for nd in chain):
                 st.pages[name] = [nd.pages[name] for nd in chain]
         self.seqs[seq_id] = st
+        self._ref_state(st)
         self.bind_prefix(seq_id, chain)
         return st
 
@@ -187,6 +290,7 @@ class HostKVStore:
             st.prefix_node = chain[-1] if chain else None
             st.prefix_len = k * self.page_size
             self.seqs[seq_id] = st
+            self._ref_state(st)
             self.prefix_index.acquire(st.prefix_node)
         else:
             if st.prefix_node is not None:
@@ -195,6 +299,8 @@ class HostKVStore:
                 st.prefix_len = 0
                 moved = st.nbytes()
             self.seqs[seq_id] = st
+            self._ref_state(st)
+        self.enforce_budget()
         return moved
 
     # -- checkpoint (YIELD) -------------------------------------------------
@@ -214,15 +320,19 @@ class HostKVStore:
                 existing = st.pages.get(name, [])
                 keep = min(keep_pages, len(existing))
                 pages = list(existing[:keep])
+                for p in existing[keep:]:
+                    self._unref_page(p)     # replaced by fresh pages below
                 for start in range(keep * P, length, P):
                     end = min(start + P, length)
                     page = np.zeros((arr.shape[0], P) + arr.shape[2:],
                                     arr.dtype)
                     page[:, : end - start] = arr[:, start:end]
                     pages.append(page)
+                    self._ref_page(page)
                 st.pages[name] = pages
             else:
-                st.whole[name] = np.array(arr)
+                self._set_whole(st, name, np.array(arr))
+        self.enforce_budget()
 
     # -- incremental append (async KV propagation, §5.3 Sync phase) --------
     def append_tokens(self, seq_id: int, new_slices: Dict[str, np.ndarray],
@@ -238,22 +348,28 @@ class HostKVStore:
         n_new = next(iter(new_slices.values())).shape[1]
         for name, arr in new_slices.items():
             if name not in PAGED_LEAVES:
-                st.whole[name] = np.array(arr)
+                self._set_whole(st, name, np.array(arr))
                 continue
             pages = st.pages.setdefault(name, [])
             i = 0
             while i < n_new:
                 pidx, off = divmod(start + i, P)
                 while len(pages) <= pidx:
-                    pages.append(np.zeros((arr.shape[0], P) + arr.shape[2:],
-                                          arr.dtype))
+                    page = np.zeros((arr.shape[0], P) + arr.shape[2:],
+                                    arr.dtype)
+                    pages.append(page)
+                    self._ref_page(page)
                 if not pages[pidx].flags.writeable:
-                    pages[pidx] = pages[pidx].copy()   # first divergent write
+                    copy = pages[pidx].copy()   # first divergent write
+                    self._ref_page(copy)
+                    self._unref_page(pages[pidx])
+                    pages[pidx] = copy
                     self.cow_copies += 1
                 take = min(P - off, n_new - i)
                 pages[pidx][:, off: off + take] = arr[:, i: i + take]
                 i += take
         st.length = max(st.length, start + n_new)
+        self.enforce_budget()
 
     # -- restore (COMBINE) --------------------------------------------------
     def restore(self, seq_id: int, max_len: int) -> Dict[str, np.ndarray]:

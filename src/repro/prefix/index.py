@@ -74,6 +74,7 @@ class PrefixIndex:
         self.max_pages = max_pages
         self.root = PrefixNode(0, (), None)
         self.num_pages = 0
+        self.cached_nbytes = 0      # bytes of page arrays held by the trie
         self._tick = 0
         self.stats = {"hits": 0, "hit_tokens": 0, "inserted_pages": 0,
                       "evicted_pages": 0, "acquires": 0, "releases": 0}
@@ -120,6 +121,7 @@ class PrefixIndex:
                         nd.pages[name] = page
                 cur.children[key] = nd
                 self.num_pages += 1
+                self.cached_nbytes += nd.nbytes()
                 self.stats["inserted_pages"] += 1
             out.append(nd)
             cur = nd
@@ -139,6 +141,7 @@ class PrefixIndex:
                 child.pages = dict(nd.pages)
                 cur.children[nd.key] = child
                 self.num_pages += 1
+                self.cached_nbytes += child.nbytes()
                 self.stats["inserted_pages"] += 1
                 new_bytes += child.nbytes()
             chain.append(child)
@@ -190,13 +193,27 @@ class PrefixIndex:
             stack.extend(nd.children.values())
         return out
 
+    def _evict(self, victim: PrefixNode) -> None:
+        del victim.parent.children[victim.key]
+        self.cached_nbytes -= victim.nbytes()
+        victim.pages.clear()    # cascade: frees the host-store pages
+        self.num_pages -= 1
+        self.stats["evicted_pages"] += 1
+
+    def evict_lru(self) -> bool:
+        """Evict the LRU zero-ref leaf regardless of ``max_pages`` — the
+        entry point of the host-store byte-budget cascade
+        (``HostKVStore.enforce_budget``).  Returns False when every span
+        is live-referenced (nothing evictable)."""
+        victims = self._evictable()
+        if not victims:
+            return False
+        self._evict(min(victims, key=lambda nd: nd.tick))
+        return True
+
     def _maybe_evict(self) -> None:
         while self.num_pages > self.max_pages:
             victims = self._evictable()
             if not victims:
                 return              # every span is live-referenced
-            victim = min(victims, key=lambda nd: nd.tick)
-            del victim.parent.children[victim.key]
-            victim.pages.clear()    # cascade: frees the host-store pages
-            self.num_pages -= 1
-            self.stats["evicted_pages"] += 1
+            self._evict(min(victims, key=lambda nd: nd.tick))

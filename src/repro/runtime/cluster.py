@@ -51,6 +51,7 @@ class SimEngine:
                  node_id: int = 0, num_devices: int = 8,
                  max_active: int = 64, max_len: int = 16384,
                  page_size: int = 64, plan: Optional[plan_lib.Plan] = None,
+                 device_pages: Optional[int] = None,
                  partition_efficiency: float = 0.7,
                  reconfig_s: float = 7.0,
                  faults: Optional[NodeFaults] = None,
@@ -68,7 +69,15 @@ class SimEngine:
         self.plan = plan or plan_lib.search_plan(
             cfg, hw, ctx=max_len // 2, new_tokens=1, max_active=max_active)
         self.host_store = HostKVStore(page_size, enable_prefix=enable_prefix)
-        self.allocator = PageAllocator(max_active * 4, page_size)
+        # device_pages models the node's KV pool size: the governor's
+        # oversubscription experiments shrink it well under the working
+        # set; the default keeps the historical 4-pages-per-slot pool,
+        # which is a soft modelling budget — only an explicit device_pages
+        # is a real budget the governor may steer against
+        self.allocator = PageAllocator(device_pages or max_active * 4,
+                                       page_size,
+                                       governed=device_pages is not None)
+        self.kv_bytes_per_token = kv_bytes_per_token(cfg)
         self.stats = PrimitiveStats()
         self.vclock = 0.0
         self.busy_s = 0.0
@@ -91,6 +100,22 @@ class SimEngine:
         self._staged: List[Dict] = []
         self._staged_bytes = 0
         self.sync_stalls = 0
+        # staged h2d restores (governor): seq_id -> {"nbytes", "length",
+        # "hidden"} — the host→device mirror of the d2h pipeline above,
+        # metered by its own h2d ring budget (a full-sequence restore
+        # dwarfs a decode-page blob, and restore prefetch must never
+        # starve the sync pipeline's staging room; two full sequences
+        # deep, like the real engine's restore ring).  A decode between
+        # stage and take marks the restore hidden (its transfer
+        # overlapped compute).
+        self._restore_staged: Dict[int, Dict] = {}
+        self._restore_bytes = 0
+        self._restore_cap = 2 * int(self.kv_bytes_per_token * max_len)
+        self.restore_stages = 0
+        self.restore_stalls = 0
+        self.restore_wait_s = 0.0
+        self.restore_stage_hidden_s = 0.0
+        self.restore_staged_bytes = 0
         # §5.6 robustness: fault injection + guarded-transfer accounting
         # (identical surface to NodeEngine — same FaultPlan drives both)
         self.faults = faults
@@ -136,10 +161,13 @@ class SimEngine:
             if self.faults.oom_active():
                 self.oom_rejections += 1
                 return None
+        if not self.allocator.can_admit(2):
+            return None         # page pool exhausted: admission waits
         for s, owner in enumerate(self.slot_owner):
             if owner is None:
+                if self.allocator.alloc(co.seq_id, 2) is None:
+                    return None
                 self.slot_owner[s] = co.seq_id
-                self.allocator.alloc(co.seq_id, 2)
                 return s
         return None
 
@@ -168,6 +196,8 @@ class SimEngine:
         if self.faults is not None and self.faults.dead:
             return              # zombie: no compute until failover
         for e in self._staged:          # this compute hides their transfer
+            e["hidden"] = True
+        for e in self._restore_staged.values():     # and the h2d prefetches
             e["hidden"] = True
         regular = [c for c in active if not c.partition_group]
         parts = [c for c in active if c.partition_group]
@@ -303,6 +333,80 @@ class SimEngine:
                 self.abandoned_blobs += 1
                 continue
             self.vclock += 0.001 if e["hidden"] else 0.005
+
+    # ------------------------------------- staged h2d restores (governor)
+    _RESTORE_S = 0.004      # modeled h2d restore transfer (Table-2 scale)
+
+    def stage_restore(self, co) -> bool:
+        """Sim mirror of the real engine's restore prefetch: reserve the
+        modeled restore bytes against the h2d restore-ring budget and
+        issue the (virtual) host→device copy; the next decode marks it
+        hidden."""
+        ent = self._restore_staged.get(co.seq_id)
+        if ent is not None:
+            st = self.host_store.seqs.get(co.seq_id)
+            if st is not None and st.length == ent["length"]:
+                return True
+            self.discard_restore(co.seq_id)     # stale: checkpoint advanced
+        if not self.host_store.has(co.seq_id):
+            return False
+        length = self.host_store.seqs[co.seq_id].length
+        nbytes = int(self.kv_bytes_per_token * length)
+        if self._restore_bytes + nbytes > self._restore_cap:
+            self.restore_stalls += 1
+            return False
+        try:
+            self.transfer("restore", lambda: None)
+        except TransferDeadLetter:
+            return False
+        self._restore_staged[co.seq_id] = {
+            "nbytes": nbytes, "length": length, "hidden": False}
+        self._restore_bytes += nbytes
+        self.restore_stages += 1
+        self.restore_staged_bytes += nbytes
+        self.vclock += 0.001        # async issue: dispatch cost only
+        return True
+
+    def restore_ready(self, seq_id: int) -> bool:
+        """True when the staged restore drained: a decode page ran since
+        the (virtual) h2d copy was issued, so the transfer is hidden and
+        COMBINE pays only the residual barrier."""
+        ent = self._restore_staged.get(seq_id)
+        st = self.host_store.seqs.get(seq_id)
+        return (ent is not None and ent["hidden"]
+                and st is not None and st.length == ent["length"])
+
+    def take_restore(self, seq_id: int) -> Optional[Dict]:
+        """Consume a staged restore at COMBINE: a hidden prefetch pays
+        only the residual barrier (its transfer overlapped a decode); an
+        unhidden or missing one pays the full modeled restore.  Returns
+        ``{}`` (sim KV is metadata-only) or None without host state."""
+        ent = self._restore_staged.pop(seq_id, None)
+        st = self.host_store.seqs.get(seq_id)
+        if ent is not None:
+            self._restore_bytes -= ent["nbytes"]
+            if st is not None and st.length == ent["length"]:
+                self.restore_wait_s += self._RESTORE_S
+                if ent["hidden"]:
+                    self.restore_stage_hidden_s += self._RESTORE_S
+                    self.vclock += 0.001
+                else:
+                    self.vclock += self._RESTORE_S
+                return {}
+        if st is None:
+            return None
+        self.restore_wait_s += self._RESTORE_S
+        self.vclock += 0.001 + self._RESTORE_S      # synchronous restore
+        return {}
+
+    def discard_restore(self, seq_id: int) -> None:
+        ent = self._restore_staged.pop(seq_id, None)
+        if ent is not None:
+            self._restore_bytes -= ent["nbytes"]
+
+    def discard_restores(self) -> None:
+        self._restore_staged.clear()
+        self._restore_bytes = 0
 
     def prefill(self, cos: Sequence[SequenceCoroutine]):
         """Shared-prefix-aware prefill: identical prompts in the batch
@@ -448,7 +552,8 @@ class Cluster:
                  page_size: int = 64,
                  sched_cfg: Optional[SchedulerConfig] = None,
                  fault_plan: Optional[FaultPlan] = None,
-                 enable_prefix: bool = True):
+                 enable_prefix: bool = True,
+                 device_pages: Optional[int] = None):
         self.cfg = cfg
         self.hw = hw
         plan = plan_lib.search_plan(cfg, hw, ctx=max_len // 2, new_tokens=1,
@@ -457,7 +562,8 @@ class Cluster:
                                   num_devices=devices_per_node,
                                   max_active=max_active, max_len=max_len,
                                   page_size=page_size, plan=plan,
-                                  enable_prefix=enable_prefix)
+                                  enable_prefix=enable_prefix,
+                                  device_pages=device_pages)
                         for i in range(nodes)]
         self._inter_node_bw = 25e9
         # the §5.6 migrate-vs-recompute cost model rides the scheduler's

@@ -165,7 +165,8 @@ class NodeEngine:
                  device_pages: Optional[int] = None,
                  module_granularity: bool = False, b_attn: int = 0,
                  fused: bool = True, overlap: bool = True,
-                 ring_buffer_bytes: Optional[int] = None, seed: int = 0,
+                 ring_buffer_bytes: Optional[int] = None,
+                 restore_ring_bytes: Optional[int] = None, seed: int = 0,
                  faults: Optional[NodeFaults] = None,
                  retry_policy: Optional[RetryPolicy] = None,
                  enable_prefix: bool = True):
@@ -275,6 +276,27 @@ class NodeEngine:
         # multi-slot scatter before the next consumer of device state
         self._pending_install: "OrderedDict[int, tuple]" = OrderedDict()
         self._install_cache: "OrderedDict[int, object]" = OrderedDict()
+
+        # ---- staged h2d restores (stage_restore / take_restore) -----------
+        # the host→device mirror of the d2h sync pipeline: a suspended
+        # sequence's checkpoint is device_put BEFORE its COMBINE, metered
+        # through its own h2d ring buffer (same stage/drain discipline as
+        # the d2h ring; a separate instance because one full-sequence
+        # restore dwarfs a decode-page blob, and restore prefetch must
+        # never starve the sync pipeline's staging room), so the PCIe
+        # copy rides behind the decode page between staging and admission.
+        # seq_id -> (device slices, host length at stage, ring name,
+        #            nbytes, transfer cost)
+        seq_blob = max(page_blob * max_len
+                       // (_pow2(max_active) * _pow2(page_size)), 1)
+        self.restore_ring = RingBuffer(restore_ring_bytes or 2 * seq_blob,
+                                       _HOST_LINK_BW)
+        self._restore_staged: "OrderedDict[int, tuple]" = OrderedDict()
+        self.restore_stages = 0         # restores prefetched through the ring
+        self.restore_stalls = 0         # prefetches refused: ring had no room
+        self.restore_wait_s = 0.0       # h2d restore transfer time (all paths)
+        self.restore_stage_hidden_s = 0.0   # portion hidden behind decode
+        self.restore_staged_bytes = 0   # cumulative prefetched bytes
 
     # ------------------------------------------------------------- protocol
     def clock(self) -> float:
@@ -873,6 +895,90 @@ class NodeEngine:
             if self.host_store.has(seq_id):
                 self.host_store.drop(seq_id)
             self.synced_len.pop(seq_id, None)
+
+    # ------------------------------------- staged h2d restores (governor)
+    def stage_restore(self, co: SequenceCoroutine) -> bool:
+        """Prefetch a suspended sequence's host checkpoint toward the
+        device (async ``device_put`` per cache leaf) behind a ring-buffer
+        reservation — the h2d mirror of ``stage_appends``.  The copy
+        overlaps the decode page(s) between now and the sequence's
+        COMBINE, where ``take_restore`` consumes it without PCIe wait.
+        Returns True when a restore is staged for the sequence
+        (pre-existing counts); False when it cannot be (no host state, or
+        the ring has no room — counted in ``restore_stalls``, the same
+        backpressure signal the d2h pipeline uses)."""
+        ent = self._restore_staged.get(co.seq_id)
+        if ent is not None:
+            if (self.host_store.has(co.seq_id)
+                    and self.host_store.seqs[co.seq_id].length == ent[1]):
+                return True
+            self.discard_restore(co.seq_id)     # stale: checkpoint advanced
+        if not self.host_store.has(co.seq_id):
+            return False
+        t0 = time.perf_counter()
+        slices = self.host_store.restore(co.seq_id, self.max_len)
+        nbytes = sum(int(np.asarray(v).nbytes) for v in slices.values())
+        if not self.restore_ring.can_fit(nbytes):
+            self.restore_stalls += 1
+            return False
+        try:
+            dev = self.transfer("restore", lambda: {
+                k: jax.device_put(v) for k, v in slices.items()})
+        except TransferDeadLetter:
+            return False
+        self.restore_ring.reserve(f"restore{co.seq_id}", nbytes)
+        self._restore_staged[co.seq_id] = (
+            dev, self.host_store.seqs[co.seq_id].length,
+            f"restore{co.seq_id}", nbytes, time.perf_counter() - t0)
+        self.restore_stages += 1
+        self.restore_staged_bytes += nbytes
+        return True
+
+    def restore_ready(self, seq_id: int) -> bool:
+        """True when the sequence's staged restore has drained: a live
+        (non-stale) prefetch is in the ring, so COMBINE's ``take_restore``
+        installs it without a synchronous PCIe wait."""
+        ent = self._restore_staged.get(seq_id)
+        return (ent is not None and self.host_store.has(seq_id)
+                and self.host_store.seqs[seq_id].length == ent[1])
+
+    def take_restore(self, seq_id: int) -> Optional[Dict]:
+        """Consume a staged restore for COMBINE.  A prefetch whose source
+        checkpoint advanced since staging is stale and discarded (the
+        append pipeline drained new pages into the host store) — the
+        restore then falls back to the synchronous path.  Returns None
+        only when the sequence has no host state at all."""
+        ent = self._restore_staged.pop(seq_id, None)
+        cur = (self.host_store.seqs[seq_id].length
+               if self.host_store.has(seq_id) else None)
+        if ent is not None:
+            dev, length, name, nbytes, cost = ent
+            self.restore_ring.release(name)
+            if cur is not None and cur == length:
+                # the device_put overlapped the pages decoded since it
+                # was staged: its transfer time was hidden behind compute
+                self.restore_wait_s += cost
+                self.restore_stage_hidden_s += cost
+                return dev
+        if cur is None:
+            return None
+        t0 = time.perf_counter()
+        slices = self.host_store.restore(seq_id, self.max_len)
+        self.restore_wait_s += time.perf_counter() - t0
+        return slices
+
+    def discard_restore(self, seq_id: int) -> None:
+        """Drop one staged restore and release its ring reservation
+        (MIGRATE moved the state to another node, or it went stale)."""
+        ent = self._restore_staged.pop(seq_id, None)
+        if ent is not None:
+            self.restore_ring.release(ent[2])
+
+    def discard_restores(self) -> None:
+        """Drop every staged restore (NODE_FAILURE teardown: the target
+        devices are gone; the ring was already reset)."""
+        for seq_id in list(self._restore_staged):
+            self.discard_restore(seq_id)
 
     def prefill(self, cos: Sequence[SequenceCoroutine]):
         """Prefill a batch of INIT coroutines; leaves them INACTIVE with KV

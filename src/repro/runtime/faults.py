@@ -31,8 +31,13 @@ fault kind             honored at
                        ``ProgressTracker`` sees the straggler.  Heartbeats
                        still ARRIVE: a straggler is slow, never dead, and
                        must raise NODE_SLOW, not NODE_FAILURE
-``oom``                ``acquire_slot`` refuses admissions for ``duration``
-                       ticks (allocator pressure without real OOM)
+``oom``                allocator exhaustion for ``duration`` ticks:
+                       ``acquire_slot`` refuses admissions AND the
+                       page-boundary extension alloc fails mid-flight —
+                       the scheduler's governor preempts the affected
+                       sequences (checkpoint → host → free pages) and
+                       re-admits them through COMBINE when the fault
+                       clears, with bitwise-identical tokens
 =====================  ====================================================
 
 Transfer retry envelope
@@ -57,7 +62,7 @@ from typing import Callable, List, Optional, Sequence
 
 FAULT_KINDS = ("node_death", "stale_heartbeat", "transfer_fail",
                "transfer_timeout", "straggler", "oom")
-TRANSFER_KINDS = ("stage", "drain", "install", "migrate", "any")
+TRANSFER_KINDS = ("stage", "drain", "install", "migrate", "restore", "any")
 
 
 class TransferError(RuntimeError):

@@ -1,0 +1,300 @@
+"""Memory-pressure governor tests: watermark-driven preempt/re-admit,
+mid-flight OOM fault recovery with bitwise token parity, staged h2d
+restores, the ``preempt_choice`` policy hook, and the driver-tier
+host-spill budget throttle — on both engine families."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import plan as plan_lib
+from repro.core.events import EventKind
+from repro.core.scheduler import (CoroutineScheduler, SchedulerConfig,
+                                  SchedulerPolicy, _admit_budget)
+from repro.runtime.cluster import Cluster, SimEngine, fixed_workload
+from repro.runtime.engine import NodeEngine
+from repro.runtime.faults import Fault, FaultPlan
+from repro.sampling import SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# event ordering + admission budget units
+# ---------------------------------------------------------------------------
+
+
+def test_seq_preempt_priority_ordering():
+    """SEQ_PREEMPT must rank after SEQ_DONE (finished sequences free pages
+    for free — never preempt what is about to evict) and before
+    PAGE_BOUNDARY / MODULE_READY (pressure resolves before the node tries
+    to extend pages or decode again)."""
+    assert EventKind.SEQ_DONE < EventKind.SEQ_PREEMPT
+    assert EventKind.SEQ_PREEMPT < EventKind.PAGE_BOUNDARY
+    assert EventKind.SEQ_PREEMPT < EventKind.MODULE_READY
+    assert EventKind.SEQ_PREEMPT < EventKind.REFILL
+    # the policy table dispatches it
+    assert EventKind.SEQ_PREEMPT in SchedulerPolicy().table()
+
+
+def test_admit_budget_tracks_watermark_headroom():
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    eng = SimEngine(cfg, hw, node_id=0, max_active=8, max_len=1024,
+                    page_size=64, device_pages=20)
+    sched = CoroutineScheduler([eng], SchedulerConfig(
+        page_size=64, high_watermark=0.8, low_watermark=0.5))
+    # headroom under the high watermark, two pages per admission
+    assert _admit_budget(sched, eng) == (int(0.8 * 20) - 0) // 2
+    eng.allocator.alloc(1, 10)
+    assert _admit_budget(sched, eng) == (16 - 10) // 2
+    eng.allocator.alloc(2, 8)       # used=18, over the watermark
+    assert _admit_budget(sched, eng) == 0
+    sched.cfg.govern_memory = False
+    assert _admit_budget(sched, eng) == eng.max_active
+
+
+# ---------------------------------------------------------------------------
+# SimEngine family: oversubscribed decode + parity
+# ---------------------------------------------------------------------------
+
+
+def _sim_run(device_pages, fault_plan=None, *, nodes=2, n=16, out_len=192,
+             max_ticks=100000):
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    cl = Cluster(cfg, hw, nodes=nodes, max_active=8, max_len=2048,
+                 page_size=64, device_pages=device_pages,
+                 fault_plan=fault_plan)
+    wl = fixed_workload(n, 128, out_len)
+    ids = cl.sched.submit(wl.prompts, wl.max_out)
+    rep = cl.sched.run(max_ticks=max_ticks)
+    toks = {i: list(cl.sched.cos[i].generated) for i in ids}
+    return cl, rep, toks
+
+
+def test_sim_oversubscribed_decode_completes_with_parity():
+    """Device pools ~4x smaller than the concurrent working set (8 active
+    x 5 pages vs 10 device pages): the governor preempts into the
+    watermark gap and re-admits under the low watermark — every sequence
+    still finishes with tokens identical to the unconstrained run."""
+    _, rep0, toks0 = _sim_run(256)          # unconstrained baseline
+    cl, rep1, toks1 = _sim_run(10)
+    assert rep0["completed"] == rep1["completed"] == 16
+    assert toks1 == toks0, "oversubscription must not change any token"
+    gov0 = rep0["robustness"]["governor"]
+    gov1 = rep1["robustness"]["governor"]
+    assert gov0["preempts"] == 0, "unconstrained run must never preempt"
+    assert gov1["preempts"] > 0
+    assert gov1["restores"] > 0
+    assert gov1["host_spill_bytes"] > 0
+    assert not cl.sched._preempted, "every preempted seq re-admitted"
+    # occupancy ended under the high watermark on every node
+    assert all(not e.allocator.above_high() for e in cl.engines)
+
+
+def test_sim_oversubscribed_stages_h2d_restores():
+    """Re-admissions under pressure prefetch their host→device restore
+    through the ring buffer; decodes between stage and take hide the
+    transfer, which the hidden-seconds counter records."""
+    cl, rep, _ = _sim_run(10)
+    gov = rep["robustness"]["governor"]
+    assert gov["restore_stages"] > 0
+    assert gov["restore_stage_hidden_s"] > 0
+    assert gov["restore_wait_s"] >= gov["restore_stage_hidden_s"]
+    assert sum(e.restore_staged_bytes for e in cl.engines) > 0
+
+
+def test_sim_mid_flight_oom_parity():
+    """FaultPlan.oom now fails the page-extension alloc DURING decode (not
+    just admission): affected sequences preempt through the one event-loop
+    path and re-admit when the fault clears, tokens bitwise-unchanged."""
+    plan = FaultPlan([Fault("oom", node=0, at_tick=1, duration=4)])
+    _, rep0, toks0 = _sim_run(256)
+    cl, rep1, toks1 = _sim_run(256, plan)
+    assert rep0["completed"] == rep1["completed"] == 16
+    assert toks1 == toks0, "oom recovery must not change a single token"
+    assert cl.engines[0].oom_rejections > 0, "extension allocs failed"
+    assert rep1["robustness"]["governor"]["preempts"] > 0
+    assert any("yield(oom)" in line for line in cl.sched.log)
+
+
+def test_sim_oom_with_concurrent_node_failure():
+    """Mid-flight oom on one node while another dies outright: recovery
+    composes — NODE_FAILURE reschedules the dead node's sequences, the
+    governor cycles the oom node's, and the merged run stays bitwise
+    identical to fault-free."""
+    plan = FaultPlan([
+        Fault("oom", node=0, at_tick=1, duration=3),
+        Fault("node_death", node=2, at_tick=2),
+    ], seed=0)
+    _, rep0, toks0 = _sim_run(256, nodes=3, n=24, out_len=256)
+    cl, rep1, toks1 = _sim_run(256, plan, nodes=3, n=24, out_len=256)
+    assert rep0["completed"] == rep1["completed"] == 24
+    assert toks1 == toks0
+    rb = rep1["robustness"]
+    assert 2 in rb["failed_nodes"] and rb["health_failovers"] >= 1
+    assert cl.engines[0].oom_rejections > 0
+    assert rb["governor"]["preempts"] > 0
+
+
+def test_preempt_choice_hook_can_veto_victims():
+    """A ``preempt_choice`` policy returning "keep" vetoes watermark
+    preemptions (pressure then resolves through page-exhaustion eviction
+    as before the governor) — and the hook actually gets consulted."""
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    calls = []
+
+    def veto(sched, co, eng):
+        calls.append(co.seq_id)
+        return "keep"
+
+    engines = [SimEngine(cfg, hw, node_id=0, max_active=8, max_len=2048,
+                         page_size=64, device_pages=10)]
+    sched = CoroutineScheduler(engines, SchedulerConfig(page_size=64),
+                               policy=SchedulerPolicy(preempt_choice=veto))
+    wl = fixed_workload(8, 128, 192)
+    sched.submit(wl.prompts, wl.max_out)
+    rep = sched.run(max_ticks=100000)
+    assert rep["completed"] == 8
+    assert calls, "watermark pressure must consult the hook"
+    assert not any("yield(preempt)" in line for line in sched.log), \
+        "every watermark preemption was vetoed"
+
+
+def test_governor_disabled_restores_legacy_admission():
+    """govern_memory=False: no SEQ_PREEMPT, no watermark admission caps —
+    pressure resolves through page-exhaustion eviction and the mid-flight
+    exhaustion preempt (the one recovery path stays armed)."""
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    engines = [SimEngine(cfg, hw, node_id=0, max_active=8, max_len=2048,
+                         page_size=64, device_pages=10)]
+    sched = CoroutineScheduler(
+        engines, SchedulerConfig(page_size=64, govern_memory=False))
+    wl = fixed_workload(8, 128, 192)
+    sched.submit(wl.prompts, wl.max_out)
+    rep = sched.run(max_ticks=100000)
+    assert rep["completed"] == 8
+    assert not any("yield(preempt)" in line for line in sched.log), \
+        "watermark preemption must stay off when the governor is disabled"
+
+
+# ---------------------------------------------------------------------------
+# NodeEngine family: real-engine oversubscription + oom chaos
+# ---------------------------------------------------------------------------
+
+
+def _real_run(device_pages=None, fault_plan=None):
+    cfg = reduced_config("llama3_2_1b")
+    rng = np.random.default_rng(5)
+    engines = [NodeEngine(cfg, node_id=i, max_active=3, max_len=64,
+                          page_size=8, seed=0, device_pages=device_pages)
+               for i in range(2)]
+    sched = CoroutineScheduler(engines, SchedulerConfig(page_size=8),
+                               fault_plan=fault_plan)
+    prompts = [list(rng.integers(2, 100, 5)) for _ in range(6)]
+    sps = [SamplingParams() if i % 2 == 0
+           else SamplingParams(temperature=0.8, top_k=20, seed=40 + i)
+           for i in range(6)]
+    ids = sched.submit(prompts, [24] * 6, sampling=sps)
+    rep = sched.run(max_ticks=4000)
+    return sched, rep, {i: list(sched.cos[i].generated) for i in ids}
+
+
+def test_real_engine_oversubscribed_parity_bitwise():
+    """Real jax engines with the device pool shrunk ~4x under the working
+    set (3 active x 4 pages vs 8 device pages): preempt → host spill →
+    staged h2d restore → re-admit reproduces the exact token streams,
+    greedy AND seeded-sampled rows."""
+    _, rep0, toks0 = _real_run()
+    sched, rep1, toks1 = _real_run(device_pages=8)
+    assert rep0["completed"] == rep1["completed"] == 6
+    assert toks1 == toks0, \
+        "preempt/restore cycling must be pure rescheduling"
+    gov = rep1["robustness"]["governor"]
+    assert gov["preempts"] > 0
+    assert gov["restores"] > 0
+    assert gov["host_spill_bytes"] > 0
+    assert not sched._preempted
+
+
+def test_real_engine_mid_flight_oom_with_node_death_parity():
+    """Real engines under a mid-flight oom window on node 0 plus node 1
+    dying: both recovery paths compose and the tokens stay bitwise
+    identical to the fault-free run."""
+    plan = FaultPlan([
+        Fault("oom", node=0, at_tick=1, duration=3),
+        Fault("node_death", node=1, at_tick=2),
+    ], seed=2)
+    _, rep0, toks0 = _real_run()
+    sched, rep1, toks1 = _real_run(fault_plan=plan)
+    assert rep0["completed"] == rep1["completed"] == 6
+    assert toks1 == toks0
+    rb = rep1["robustness"]
+    assert 1 in rb["failed_nodes"] and rb["health_failovers"] >= 1
+    assert sched.engines and \
+        any(getattr(e, "oom_rejections", 0) > 0
+            for e in sched._all_engines)
+
+
+# ---------------------------------------------------------------------------
+# driver tier: host-spill budget throttle
+# ---------------------------------------------------------------------------
+
+
+def test_replica_host_over_budget_flag():
+    from repro.driver.replica import ReplicaHandle
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    plan = plan_lib.search_plan(cfg, hw, ctx=1024, new_tokens=1,
+                                max_active=8)
+    engines = [SimEngine(cfg, hw, node_id=0, max_active=8, max_len=2048,
+                         page_size=64, plan=plan)]
+    r = ReplicaHandle.spawn(0, engines, sched_cfg=SchedulerConfig(
+        page_size=64))
+    assert not r.host_over_budget()         # unbounded budget
+    store = engines[0].host_store
+    store.budget_bytes = 10
+    assert not r.host_over_budget()         # empty store fits
+    store._nbytes = 100                     # model a spilled working set
+    assert r.host_over_budget()
+    store._nbytes = 0
+    r.cancel()
+    assert not r.host_over_budget()         # closed replica never throttles
+
+
+def test_driver_throttles_over_budget_replica(tmp_path):
+    """A replica whose host store is pinned over its byte budget stops
+    receiving admissions (throttle, not death); the other replica absorbs
+    the stream and the merged report carries the governor counters.  Sim
+    stores checkpoint metadata (zero bytes), so a negative budget models
+    a store the prefix-LRU cascade cannot drain."""
+    from repro.data.pipeline import LongTailRequestStream
+    from repro.driver import DriverConfig, StreamingJobDriver
+    from repro.runtime.cluster import sim_node_group
+    cfg = get_config("qwen3_moe_30b")
+    hw = plan_lib.Hardware()
+    plan = plan_lib.search_plan(cfg, hw, ctx=2048, new_tokens=1,
+                                max_active=16)
+
+    def factory(rid):
+        group = sim_node_group(cfg, hw, nodes=1, first_node_id=rid * 100,
+                               max_active=16, max_len=4096, page_size=64,
+                               plan=plan)
+        if rid == 0:
+            for e in group:
+                e.host_store.budget_bytes = -1      # permanently over
+        return group
+
+    inp = str(tmp_path / "in.jsonl")
+    LongTailRequestStream(40, seed=11, mean_in=24,
+                          mean_out=10).write_jsonl(inp)
+    drv = StreamingJobDriver(
+        inp, str(tmp_path / "out.jsonl"), str(tmp_path / "led"),
+        factory, cfg=DriverConfig(window=16, replicas=2),
+        sched_cfg=SchedulerConfig(page_size=64))
+    res = drv.run()
+    assert res.status == "completed" and res.completed == 40
+    assert res.report["budget_throttled"] > 0
+    assert drv.replicas[0].admitted == 0, \
+        "the over-budget replica must never receive work"
+    assert "governor" in res.report["robustness"]

@@ -82,3 +82,178 @@ def test_eviction_most_progress_first(lengths):
     if evicted and survivors:
         assert max(lengths[s] for s in survivors) <= max(
             lengths[e] for e in evicted)
+
+
+# ---------------------------------------------------------------------------
+# deterministic eviction tie-breaks (governor regression)
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_tiebreak_is_seq_id_not_insertion_order():
+    """Equal-progress victims must evict in seq_id order regardless of the
+    dict's insertion order — a chaos replay whose `active` dict was built
+    in a different order must pick the same victims, or its recovery
+    diverges from the fault-free run."""
+    def run(insertion):
+        al = PageAllocator(total_pages=6, page_size=8)
+        for s in insertion:
+            al.alloc(s, 2)
+        return al.ensure_two_pages({s: 100 for s in insertion})
+    fwd = run([0, 1, 2])
+    rev = run([2, 1, 0])
+    assert fwd == rev
+    # with all at equal progress the highest seq_id is NOT preferred —
+    # ties break ascending by id
+    assert fwd == sorted(fwd)
+
+
+def test_eviction_equal_progress_all_active():
+    """All active at identical progress: eviction still terminates, still
+    deterministic, and frees enough for two pages per survivor."""
+    al = PageAllocator(total_pages=8, page_size=8)
+    for s in range(4):
+        al.alloc(s, 2)
+    evicted = al.ensure_two_pages({s: 50 for s in range(4)})
+    assert evicted == sorted(evicted)
+    survivors = [s for s in range(4) if s not in evicted]
+    assert len(al.free) >= 2 * len(survivors) - sum(
+        len(al.pages_of(s)) for s in survivors) or not survivors
+
+
+# ---------------------------------------------------------------------------
+# allocator edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_admission_with_exactly_reserve_free_pages():
+    al = PageAllocator(total_pages=4, page_size=8)
+    assert al.alloc(1, 2) is not None
+    assert al.can_admit(2)          # exactly `reserve` pages left
+    assert al.alloc(2, 2) is not None
+    assert not al.can_admit(2)      # zero left
+    assert al.can_admit(0)
+    assert al.alloc(3, 1) is None
+
+
+def test_free_seq_unknown_id_is_safe():
+    al = PageAllocator(total_pages=4, page_size=8)
+    assert al.free_seq(99) == 0
+    assert len(al.free) == 4
+    assert al.stats.frees == 0
+
+
+def test_peak_used_across_evict_readmit_cycles():
+    al = PageAllocator(total_pages=8, page_size=8)
+    al.alloc(0, 6)
+    assert al.stats.peak_used == 6
+    al.free_seq(0)
+    assert al.used == 0
+    al.alloc(1, 4)
+    assert al.stats.peak_used == 6      # peak survives the free
+    al.alloc(2, 4)                      # refused (only 4 free)
+    assert al.stats.peak_used == 6
+    al.alloc(2, 3)
+    assert al.stats.peak_used == 7      # new high-water mark
+
+
+def test_watermark_queries():
+    al = PageAllocator(total_pages=10, page_size=8,
+                       high_watermark=0.8, low_watermark=0.5)
+    al.alloc(0, 5)
+    assert not al.above_high() and not al.below_low()   # dead band
+    al.alloc(1, 4)
+    assert al.above_high()
+    al.free_seq(1)
+    al.free_seq(0)
+    assert al.below_low() and al.occupancy == 0.0
+
+
+# ---------------------------------------------------------------------------
+# host-store incremental byte accounting (O(1) nbytes counter)
+# ---------------------------------------------------------------------------
+
+
+def _mk_slices(rng, n_tokens):
+    return {"k": rng.standard_normal((2, n_tokens, 3)).astype(np.float32)}
+
+
+def _assert_counter(store):
+    assert store._nbytes == store.nbytes_walk(), (
+        store._nbytes, store.nbytes_walk())
+
+
+@given(steps=st.lists(st.sampled_from(["ckpt", "append", "drop"]),
+                      min_size=1, max_size=30),
+       page=st.integers(1, 8))
+@SET
+def test_nbytes_counter_matches_walk(steps, page):
+    """The incrementally-maintained byte counter equals a full recomputed
+    walk after any interleaving of checkpoint/append/drop."""
+    rng = np.random.default_rng(3)
+    store = HostKVStore(page)
+    lengths = {}
+    for i, op in enumerate(steps):
+        seq = i % 3
+        if op == "ckpt":
+            n = int(rng.integers(1, 12))
+            store.checkpoint(seq, _mk_slices(rng, n), n)
+            lengths[seq] = n
+        elif op == "append" and seq in lengths:
+            store.append_tokens(seq, _mk_slices(rng, 1), lengths[seq])
+            lengths[seq] += 1
+        elif op == "drop" and seq in lengths:
+            store.drop(seq)
+            del lengths[seq]
+        _assert_counter(store)
+    assert store.nbytes() == store._nbytes
+
+
+def test_nbytes_counter_across_adopt_and_pop():
+    """Migrate's pop_state + adopt keep both stores' counters exact."""
+    rng = np.random.default_rng(4)
+    src, dst = HostKVStore(4), HostKVStore(4)
+    src.checkpoint(1, _mk_slices(rng, 10), 10)
+    _assert_counter(src)
+    st_ = src.pop_state(1)
+    _assert_counter(src)
+    assert src._nbytes == 0
+    dst.adopt(1, st_)
+    _assert_counter(dst)
+    assert dst.nbytes() > 0
+
+
+def test_nbytes_counter_with_cow_and_shared_prefix():
+    """publish_prefix page swaps, clone_shared, and COW copies all keep
+    the counter equal to the dedup walk (shared pages counted once)."""
+    rng = np.random.default_rng(5)
+    store = HostKVStore(4, enable_prefix=True)
+    prompt = list(range(8))                 # two full pages
+    store.checkpoint(1, _mk_slices(rng, 8), 8)
+    store.publish_prefix(1, prompt)
+    _assert_counter(store)
+    store.clone_shared(1, 2)
+    _assert_counter(store)
+    # sibling 2 appends into a shared page -> COW copy
+    store.append_tokens(2, _mk_slices(rng, 1), 8)
+    _assert_counter(store)
+    assert store.cow_copies >= 0
+    store.drop(2)
+    _assert_counter(store)
+    store.drop(1)
+    _assert_counter(store)
+
+
+def test_host_budget_cascades_to_prefix_eviction():
+    """Exhausting the byte budget evicts LRU prefix spans; an over-budget
+    store with only live spans reports over_budget (driver throttle)."""
+    rng = np.random.default_rng(6)
+    store = HostKVStore(4, enable_prefix=True, budget_bytes=1)
+    store.checkpoint(1, _mk_slices(rng, 8), 8)
+    store.publish_prefix(1, list(range(8)))
+    # span still referenced by seq 1 -> nothing evictable yet
+    assert store.over_budget()
+    store.drop(1)       # releases the span; stays in trie as reusable cache
+    evicted = store.enforce_budget()
+    assert evicted > 0
+    assert store.budget_evictions == evicted
+    assert store.prefix_index.cached_nbytes == 0
